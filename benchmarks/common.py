@@ -1,0 +1,105 @@
+"""Shared benchmark machinery: paper-protocol query generation + timing.
+
+The paper's protocol (§VI-A): per dataset, 2k true- + 2k false-queries per
+operator family (AND / OR / NOT / LCR) with |labels| = 2 (small-|ζ| sets)
+or 4.  This module reproduces the generator at configurable scale (the
+container is a single CPU, so the default scale is reduced; pass
+``--scale full`` for paper-sized graphs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import dfs_baseline, graph as G, pattern as pat
+from repro.core import tdr_build, tdr_query
+
+SCALES = {
+    # n_vertices for synthetic sweeps; queries per set
+    "smoke": {"v": 400, "queries": 30, "d": [2, 4], "labels": [4, 8],
+              "scal_v": [200, 400]},
+    "small": {"v": 2_000, "queries": 100, "d": [2, 4, 6, 8],
+              "labels": [8, 16, 32], "scal_v": [500, 1_000, 2_000, 4_000]},
+    "full": {"v": 200_000, "queries": 2_000, "d": [2, 4, 6, 8],
+             "labels": [8, 16, 32, 64],
+             "scal_v": [200_000, 400_000, 600_000, 1_000_000]},
+}
+
+
+@dataclasses.dataclass
+class QuerySet:
+    name: str
+    queries: list        # [(u, v, pattern)]
+    truth: list          # oracle answers
+
+
+def make_query_sets(g: G.Graph, n_per_set: int, n_labels_in_query: int,
+                    seed: int = 0) -> dict:
+    """AND/OR/NOT/LCR true+false query sets following the paper's §VI-A."""
+    rng = np.random.default_rng(seed)
+    sets: dict[str, QuerySet] = {}
+    makers = {
+        "AND": lambda labs: pat.all_of(labs),
+        "OR": lambda labs: pat.any_of(labs),
+        "NOT": lambda labs: pat.none_of(labs),
+        "LCR": lambda labs: pat.lcr(labs, g.n_labels),
+    }
+    for fam, mk in makers.items():
+        true_q, false_q = [], []
+        tries = 0
+        while (len(true_q) < n_per_set or len(false_q) < n_per_set) \
+                and tries < n_per_set * 300:
+            tries += 1
+            u = int(rng.integers(g.n_vertices))
+            v = int(rng.integers(g.n_vertices))
+            k = min(n_labels_in_query, g.n_labels)
+            labs = rng.choice(g.n_labels, size=k, replace=False).tolist()
+            p = mk(labs)
+            ans = dfs_baseline.answer_pcr(g, u, v, p)
+            if ans and len(true_q) < n_per_set:
+                true_q.append((u, v, p))
+            elif not ans and len(false_q) < n_per_set:
+                false_q.append((u, v, p))
+        sets[f"{fam}-true"] = QuerySet(f"{fam}-true", true_q,
+                                       [True] * len(true_q))
+        sets[f"{fam}-false"] = QuerySet(f"{fam}-false", false_q,
+                                        [False] * len(false_q))
+    return sets
+
+
+def time_call(fn: Callable, *args, repeat: int = 1, **kw):
+    """(result, seconds) — min over repeats, first call excluded if >1."""
+    best = float("inf")
+    out = None
+    for i in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+    return out, best
+
+
+def time_tdr(idx, qs: QuerySet, repeat: int = 2):
+    """TDR batch answering time (jit warm on first repeat)."""
+    ans, sec = time_call(tdr_query.answer_batch, idx, qs.queries,
+                         repeat=repeat)
+    correct = ans.tolist() == qs.truth
+    return sec, correct
+
+
+def time_dfs(g, qs: QuerySet):
+    stats = dfs_baseline.SearchStats()
+    t0 = time.perf_counter()
+    for (u, v, p) in qs.queries:
+        dfs_baseline.answer_pcr(g, u, v, p, stats)
+    return time.perf_counter() - t0, stats
+
+
+def emit(rows: list, header: Sequence[str]):
+    print(",".join(header))
+    for row in rows:
+        print(",".join(str(x) for x in row))
+    print()

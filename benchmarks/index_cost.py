@@ -1,0 +1,43 @@
+"""Paper Table IV: indexing time and space — TDR vs P2H-lite full index.
+
+P2H-lite (the full-closure baseline) only builds on small graphs — exactly
+the paper's point about full LCR indices not scaling.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph as G, lcr, tdr_build
+from . import common
+
+
+def run(scale: str = "smoke", seed: int = 0) -> list:
+    sc = common.SCALES[scale]
+    rows = []
+    for kind in ("er", "pa"):
+        g = G.random_graph(kind, sc["v"], 4.0, 8, seed=seed)
+        t0 = time.perf_counter()
+        idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+        tdr_t = time.perf_counter() - t0
+        rows.append((f"tableIV/{kind}/TDR-index",
+                     round(tdr_t * 1e6, 1),
+                     f"bytes={idx.size_bytes()};"
+                     f"rounds={idx.fixpoint_rounds}"))
+        # full index only feasible on a small sub-scale graph (paper: P2H+
+        # times out / OOMs on the large datasets)
+        g_small = G.random_graph(kind, min(sc["v"], 300), 2.0, 4, seed=seed)
+        t0 = time.perf_counter()
+        full = lcr.P2HLite.build(g_small)
+        full_t = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        idx_small = tdr_build.build_index(g_small, tdr_build.TDRConfig())
+        tdr_small_t = time.perf_counter() - t0
+        rows.append((f"tableIV/{kind}/P2HLite-vs-TDR@{g_small.n_vertices}",
+                     round(full_t * 1e6, 1),
+                     f"tdr_us={tdr_small_t * 1e6:.0f};"
+                     f"full_bytes={full.size_bytes()};"
+                     f"tdr_bytes={idx_small.size_bytes()};"
+                     f"space_ratio={full.size_bytes() / max(idx_small.size_bytes(), 1):.1f}x"))
+    return rows

@@ -1,0 +1,27 @@
+"""Kernel micro-benchmarks: frontier_step lowering paths (ref vs mxu) and
+the fused way-filter — CPU wall-time (structural; TPU numbers come from the
+dry-run roofline)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.kernels import ops
+from . import common
+
+
+def run(scale: str = "smoke", seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    n = {"smoke": 512, "small": 2048, "full": 8192}[scale]
+    a = rng.random((n, n)) < (8.0 / n)
+    ap = jnp.asarray(bitset.pack_bits_np(a))
+    x = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, 8), dtype=np.uint32))
+    rows = []
+    for mode in ("ref", "mxu"):
+        (_, sec) = common.time_call(
+            lambda: np.asarray(ops.frontier_step(ap, x, mode=mode)),
+            repeat=3)
+        rows.append((f"kernels/frontier_step/{mode}/V{n}",
+                     round(sec * 1e6, 1), "per_round"))
+    return rows

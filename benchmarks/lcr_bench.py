@@ -1,0 +1,44 @@
+"""Paper Table V: LCR query time — TDR (via PCR translation) vs P2H-lite."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph as G, lcr, tdr_build
+from . import common
+
+
+def run(scale: str = "smoke", seed: int = 0) -> list:
+    sc = common.SCALES[scale]
+    rows = []
+    v_small = min(sc["v"], 400)   # P2H-lite needs small graphs
+    for kind in ("er", "pa"):
+        g = G.random_graph(kind, v_small, 2.0, 4, seed=seed)
+        idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+        full = lcr.P2HLite.build(g)
+        sets = common.make_query_sets(g, sc["queries"], 2, seed=seed)
+        for tf in ("true", "false"):
+            qs = sets[f"LCR-{tf}"]
+            if not qs.queries:
+                continue
+            n = len(qs.queries)
+            tdr_s, ok = common.time_tdr(idx, qs)
+            # recover the allowed-label set from the LCR pattern's
+            # (single) DNF term: allowed = ζ \ forbidden
+            from repro.core import pattern as pat
+            lcr_qs = []
+            for (u, v, p) in qs.queries:
+                terms = pat.to_dnf(p)
+                forbid = terms[0].forbid if terms else frozenset()
+                lcr_qs.append(
+                    (u, v, sorted(set(range(g.n_labels)) - forbid)))
+            t0 = time.perf_counter()
+            for (u, v, allowed) in lcr_qs:
+                full.query(u, v, allowed)
+            full_s = time.perf_counter() - t0
+            rows.append((f"tableV/{kind}/LCR-{tf}",
+                         round(tdr_s / n * 1e6, 1),
+                         f"p2h_us={full_s / max(len(lcr_qs),1) * 1e6:.1f};"
+                         f"correct={ok}"))
+    return rows

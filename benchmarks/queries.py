@@ -1,0 +1,30 @@
+"""Paper Table III: AND-/OR-/NOT-query time, TDR vs DFS, true & false sets."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import graph as G, tdr_build
+from . import common
+
+
+def run(scale: str = "smoke", seed: int = 0) -> list:
+    sc = common.SCALES[scale]
+    rows = []
+    for kind in ("er", "pa"):
+        g = G.random_graph(kind, sc["v"], 4.0, 8, seed=seed)
+        idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+        sets = common.make_query_sets(g, sc["queries"], 2, seed=seed)
+        for fam in ("AND", "OR", "NOT"):
+            for tf in ("true", "false"):
+                qs = sets[f"{fam}-{tf}"]
+                if not qs.queries:
+                    continue
+                tdr_s, ok = common.time_tdr(idx, qs)
+                dfs_s, _ = common.time_dfs(g, qs)
+                n = len(qs.queries)
+                rows.append((f"tableIII/{kind}/{fam}-{tf}",
+                             round(tdr_s / n * 1e6, 1),
+                             f"dfs_us={dfs_s / n * 1e6:.1f};"
+                             f"speedup={dfs_s / max(tdr_s, 1e-9):.1f}x;"
+                             f"correct={ok}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--scale smoke|small|full]``
+prints ``name,us_per_call,derived`` CSV rows (paper-table mapping in
+DESIGN.md §6; roofline terms come from launch/dryrun.py, not from here).
+"""
+from __future__ import annotations
+
+import argparse
+
+from . import (common, index_cost, kernels_bench, lcr_bench, queries,
+               scalability, synthetic_sweeps)
+
+MODULES = [
+    ("tableIII", queries),
+    ("tableIV", index_cost),
+    ("tableV", lcr_bench),
+    ("fig4-5", synthetic_sweeps),
+    ("fig6", scalability),
+    ("kernels", kernels_bench),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke",
+                    choices=sorted(common.SCALES))
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows = mod.run(scale=args.scale)
+        except Exception as e:  # noqa
+            rows = [(f"{name}/ERROR", 0, repr(e)[:120])]
+        for row in rows:
+            print(",".join(str(x) for x in row), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig 6 / Appendix C: scalability — vary |V| at fixed D, |ζ|."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph as G, tdr_build
+from . import common
+
+
+def run(scale: str = "smoke", seed: int = 0) -> list:
+    sc = common.SCALES[scale]
+    rows = []
+    for kind in ("er", "pa"):
+        for v in sc["scal_v"]:
+            g = G.random_graph(kind, v, 6.0, min(32, 8), seed=seed)
+            t0 = time.perf_counter()
+            idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+            bt = time.perf_counter() - t0
+            sets = common.make_query_sets(g, max(10, sc["queries"] // 10),
+                                          4, seed=seed)
+            qq = sets["AND-true"].queries + sets["NOT-false"].queries
+            truth = sets["AND-true"].truth + sets["NOT-false"].truth
+            qt = 0.0
+            if qq:
+                qt, _ = common.time_tdr(idx, common.QuerySet("x", qq, truth))
+                qt = qt / len(qq) * 1e6
+            rows.append((f"fig6/{kind}/V{v}", round(bt * 1e6, 1),
+                         f"index_bytes={idx.size_bytes()};query_us={qt:.1f}"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Figs 4/5: index time/space + query time vs avg degree D and |ζ|
+on ER- and PA-graphs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph as G, tdr_build
+from . import common
+
+
+def run(scale: str = "smoke", seed: int = 0) -> list:
+    sc = common.SCALES[scale]
+    rows = []
+    for kind in ("er", "pa"):
+        for d in sc["d"]:
+            for nl in sc["labels"]:
+                g = G.random_graph(kind, sc["v"], float(d), nl, seed=seed)
+                t0 = time.perf_counter()
+                idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+                bt = time.perf_counter() - t0
+                sets = common.make_query_sets(
+                    g, max(10, sc["queries"] // 4), 4, seed=seed)
+                qtimes = {}
+                for fam in ("AND", "OR", "NOT"):
+                    qs_t = sets[f"{fam}-true"]
+                    qs_f = sets[f"{fam}-false"]
+                    qq = qs_t.queries + qs_f.queries
+                    if not qq:
+                        continue
+                    t, _ = common.time_tdr(
+                        idx, common.QuerySet("x", qq,
+                                             qs_t.truth + qs_f.truth))
+                    qtimes[fam] = t / len(qq) * 1e6
+                rows.append((f"fig45/{kind}/D{d}/L{nl}",
+                             round(bt * 1e6, 1),
+                             f"index_bytes={idx.size_bytes()};"
+                             + ";".join(f"{k}_us={v:.1f}"
+                                        for k, v in qtimes.items())))
+    return rows

@@ -1,0 +1,33 @@
+"""Quickstart: the paper's system in 30 lines.
+
+Build an edge-labeled digraph, construct the TDR index, answer
+pattern-constrained reachability queries.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import graph, pattern, tdr_build, tdr_query
+
+# the paper's Fig. 2 graph: 10 vertices, labels a..e = 0..4
+g = graph.fig2_example()
+print(f"graph: |V|={g.n_vertices} |E|={g.n_edges} |labels|={g.n_labels}")
+
+idx = tdr_build.build_index(g, tdr_build.TDRConfig(vtx_bits=32, g_max=2,
+                                                   k=2))
+print(f"TDR index: {idx.size_bytes()} bytes, "
+      f"{idx.fixpoint_rounds} fixpoint rounds")
+
+queries = [
+    (0, 5, pattern.parse("l1 & l3")),     # b AND d   (paper Example 1)
+    (0, 4, pattern.none_of([0, 1])),      # NOT{a,b}  -> false
+    (7, 4, pattern.none_of([0])),         # NOT{a}    (paper Example 3)
+    (0, 6, pattern.parse("l1 & l4")),     # b AND e   -> true
+    (0, 9, pattern.parse("(l0 | l4) & !l1")),
+]
+answers = tdr_query.answer_batch(idx, queries)
+for (u, v, p), a in zip(queries, answers):
+    print(f"  v{u} ->({p})-> v{v}: {'reachable' if a else 'unreachable'}")
+
+# LCR is a special case of PCR
+from repro.core import lcr
+print("LCR (allowed={a,d}):",
+      lcr.answer_lcr_batch(idx, [(0, 5, [0, 3])])[0])

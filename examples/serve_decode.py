@@ -1,0 +1,13 @@
+"""Batched serving demo: prefill + incremental decode with KV/SSM caches.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-3b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+import sys
+
+if __name__ == "__main__":
+    if "--arch" not in " ".join(sys.argv):
+        sys.argv += ["--arch", "rwkv6-3b"]
+    serve_main()

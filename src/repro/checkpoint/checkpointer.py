@@ -1,0 +1,127 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json  (atomic rename from a
+``.tmp`` staging dir so a crash mid-save never corrupts the latest step).
+
+* ``save`` gathers to host (fine at example scale; at fleet scale the same
+  manifest format supports per-host shard files — see README Ops notes) and
+  can run asynchronously on a background thread so the step loop never
+  blocks on disk.
+* ``restore`` rebuilds the pytree and ``device_put``s each leaf with the
+  sharding the *caller* provides — restoring onto a different mesh than the
+  one that saved is therefore the default behaviour (elastic re-shard).
+* ``keep`` bounds disk usage; the training driver uses save+restore for its
+  failure-injection recovery test.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any) -> None:
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_state)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state: Any) -> None:
+        flat, _ = _flatten_with_paths(host_state)
+        tmp = os.path.join(self.directory, f".tmp_step_{step}")
+        final = os.path.join(self.directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{name: arr for name, arr in flat})
+        manifest = {
+            "step": step,
+            "arrays": [{"name": n, "shape": list(a.shape),
+                        "dtype": str(a.dtype)} for n, a in flat],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Restore into the structure of ``target``.
+
+        ``shardings``: optional pytree (same structure) of
+        ``jax.sharding.Sharding`` — restoring onto any mesh, not just the
+        one that saved (elastic scaling).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}", "arrays.npz")
+        data = np.load(path)
+        flat, treedef = _flatten_with_paths(target)
+        shard_flat = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(flat))
+        leaves = []
+        for (name, ref), sh in zip(flat, shard_flat):
+            arr = data[name]
+            if sh is not None:
+                leaves.append(jax.device_put(arr, sh))
+            else:
+                leaves.append(jax.device_put(arr))
+        return step, treedef.unflatten(leaves)

@@ -1,0 +1,25 @@
+"""TDR core — the paper's contribution as a composable JAX library.
+
+Public API::
+
+    from repro.core import graph, pattern, tdr_build, tdr_query
+
+    g   = graph.erdos_renyi(200_000, 6, 32)
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+    ans = tdr_query.answer_batch(idx, [(u, v, pattern.parse("l0 & !l3"))])
+"""
+from . import bitset, dfs_baseline, distributed, graph, lcr, pattern
+from . import tdr_build, tdr_query
+from .graph import Graph, erdos_renyi, fig2_example, preferential_attachment
+from .pattern import parse, all_of, any_of, none_of, lcr as lcr_pattern
+from .tdr_build import TDRConfig, TDRIndex, build_index
+from .tdr_query import QueryStats, answer, answer_batch
+
+__all__ = [
+    "Graph", "TDRConfig", "TDRIndex", "QueryStats",
+    "build_index", "answer", "answer_batch", "parse",
+    "all_of", "any_of", "none_of", "lcr_pattern",
+    "erdos_renyi", "preferential_attachment", "fig2_example",
+    "bitset", "dfs_baseline", "distributed", "graph", "lcr", "pattern",
+    "tdr_build", "tdr_query",
+]

@@ -1,0 +1,102 @@
+"""Packed-bitset utilities.
+
+The TDR index stores Bloom-style summaries as packed ``uint32`` words (the
+storage/kernel layout) but most of the *build* math runs on boolean planes,
+word-chunked so transients stay small on 1-CPU containers.  On TPU the packed
+layout feeds ``repro.kernels.bitset_matmul`` directly (32 graph columns per
+lane element).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+
+
+def n_words(nbits: int) -> int:
+    return (nbits + WORD - 1) // WORD
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a boolean array ``[..., nbits]`` into uint32 ``[..., W]``."""
+    nbits = bits.shape[-1]
+    w = n_words(nbits)
+    pad = w * WORD - nbits
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1
+        )
+    b = bits.reshape(bits.shape[:-1] + (w, WORD)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return (b * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, nbits: int) -> jax.Array:
+    """Unpack uint32 ``[..., W]`` into boolean ``[..., nbits]``."""
+    w = words.shape[-1]
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (w * WORD,))
+    return bits[..., :nbits].astype(jnp.bool_)
+
+
+def pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    nbits = bits.shape[-1]
+    w = n_words(nbits)
+    pad = w * WORD - nbits
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1
+        )
+    b = bits.reshape(bits.shape[:-1] + (w, WORD)).astype(np.uint32)
+    weights = (np.uint32(1) << np.arange(WORD, dtype=np.uint32))
+    return (b * weights).sum(axis=-1, dtype=np.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "chunk"))
+def segment_or(values: jax.Array, segment_ids: jax.Array, *, num_segments: int,
+               chunk: int = 64) -> jax.Array:
+    """OR-reduce boolean planes ``[E, nbits]`` by segment.
+
+    Implemented as chunked ``segment_max`` over uint8 planes so the transient
+    gather stays ``E x chunk`` instead of ``E x nbits``.
+    """
+    e, nbits = values.shape
+    nchunks = -(-nbits // chunk)
+    pad = nchunks * chunk - nbits
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((e, pad), dtype=values.dtype)], axis=1)
+    v = values.reshape(e, nchunks, chunk).transpose(1, 0, 2).astype(jnp.uint8)
+
+    def body(plane):
+        return jax.ops.segment_max(plane, segment_ids,
+                                   num_segments=num_segments)
+
+    out = jax.lax.map(body, v)  # [nchunks, S, chunk]
+    out = out.transpose(1, 0, 2).reshape(num_segments, nchunks * chunk)
+    return out[:, :nbits].astype(jnp.bool_)
+
+
+def words_contain(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``b ⊆ a`` elementwise over trailing word axis -> bool [...]."""
+    return jnp.all((a & b) == b, axis=-1)
+
+
+def words_intersect(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a ∩ b ≠ ∅`` over trailing word axis -> bool [...]."""
+    return jnp.any((a & b) != 0, axis=-1)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Population count over the trailing word axis."""
+    x = words
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return x.astype(jnp.int32).sum(axis=-1)

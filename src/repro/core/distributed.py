@@ -1,0 +1,246 @@
+"""Distributed TDR: vertex-partitioned index build + query over shard_map.
+
+Scaling posture (the multi-pod story for the paper's engine):
+
+* The vertex set is partitioned 1-D over every device of the mesh (the
+  flattened ``(pod, data, model)`` axes).  Each device owns the index rows
+  of its vertex shard and the *out-edges of its shard* (CSR slice).
+* One closure-fixpoint round = ``all_gather`` of the closure bitsets
+  (``V × W`` words — the only cross-device traffic; the adjacency never
+  moves) followed by a purely local OR-reduction for owned vertices.
+  On a 512-chip mesh with V=10M and 256-bit Blooms that is 320 MB per
+  round over ICI — a few ms — against an embarrassingly parallel local
+  update.
+* Query answering distributes the same way by design: broadcast the
+  (small) query batch, each device runs the filter cascade for queries
+  whose source it owns, verdicts combine with a max-reduction.  The
+  single-mesh engine (`tdr_query`) plus this module's closure fixpoint
+  carry the measured multi-pod story (EXPERIMENTS.md §Perf cell T).
+
+The same code runs on 1 CPU device in tests and on the 512-way fake-device
+mesh in the dry-run (see ``repro/launch/dryrun.py --arch tdr-graph``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import bitset
+from .graph import Graph
+
+try:  # jax>=0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def _pad_to(x: np.ndarray, n: int, axis: int = 0, fill=0) -> np.ndarray:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=fill)
+
+
+def partition_graph(graph: Graph, n_shards: int):
+    """Pad V to a multiple of shards; group edges by source shard.
+
+    Returns (v_pad, shard_edges) where shard_edges is a dense
+    ``[n_shards, e_max]`` (src_local, dst, valid) triple — static shapes so
+    the whole build jits/lowers for any mesh.
+    """
+    v_pad = -(-graph.n_vertices // n_shards) * n_shards
+    per = v_pad // n_shards
+    src, dst = graph.src, graph.indices
+    shard_of = src // per
+    e_max = int(max(1, np.bincount(shard_of, minlength=n_shards).max()))
+    src_l = np.zeros((n_shards, e_max), dtype=np.int32)
+    dst_g = np.zeros((n_shards, e_max), dtype=np.int32)
+    valid = np.zeros((n_shards, e_max), dtype=bool)
+    for s in range(n_shards):
+        m = shard_of == s
+        k = int(m.sum())
+        src_l[s, :k] = src[m] - s * per
+        dst_g[s, :k] = dst[m]
+        valid[s, :k] = True
+    return v_pad, (src_l, dst_g, valid)
+
+
+def distributed_closure(graph: Graph, seed_rows: np.ndarray, mesh: Mesh,
+                        *, rounds: int, chunk: int = 64) -> jax.Array:
+    """Closure Bloom fixpoint, vertex-sharded over every axis of ``mesh``.
+
+    ``seed_rows`` is the bool [V, nbits] per-vertex hash pattern; the result
+    is the packed closure (R[u] = OR over reachable v of bits(v)), identical
+    to the single-device `tdr_build` fixpoint.
+    """
+    n_shards = mesh.devices.size
+    axes = tuple(mesh.axis_names)
+    v_pad, (src_l, dst_g, valid) = partition_graph(graph, n_shards)
+    nbits = seed_rows.shape[1]
+    per = v_pad // n_shards
+
+    rows = _pad_to(seed_rows.astype(np.uint8), v_pad)
+    rows = rows.reshape(n_shards, per, nbits)
+
+    spec = P(axes)  # shard leading dim over the whole mesh
+    sharding = NamedSharding(mesh, spec)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=spec)
+    def run(rows_s, src_s, dst_s, valid_s):
+        # local block shapes: rows_s [1, per, nbits]; edges [1, e_max]
+        rows_l = rows_s[0].astype(jnp.bool_)
+        src_e, dst_e, ok = src_s[0], dst_s[0], valid_s[0]
+
+        def round_(r_local):
+            # exchange: full closure table (the only cross-device traffic).
+            # Gather innermost mesh axis first so the flattened ordering
+            # matches the axis-major shard numbering.
+            r_full = r_local
+            for ax in reversed(axes):
+                r_full = jax.lax.all_gather(r_full, axis_name=ax, tiled=True)
+            gathered = r_full[dst_e] & ok[:, None]
+            upd = bitset.segment_or(gathered, src_e, num_segments=per,
+                                    chunk=chunk)
+            return r_local | upd
+
+        base = round_(rows_l)  # first round seeds with neighbor bits
+
+        def body(_, r):
+            return round_(r)
+
+        r = jax.lax.fori_loop(0, rounds, body, base)
+        return r[None]
+
+    out = run(jax.device_put(rows, sharding),
+              jax.device_put(src_l, sharding),
+              jax.device_put(dst_g, sharding),
+              jax.device_put(valid, sharding))
+    out = out.reshape(v_pad, nbits)[:graph.n_vertices]
+    return bitset.pack_bits(out)
+
+
+def lower_distributed_closure_2d(mesh: Mesh, v_global: int, e_max: int,
+                                 nbits: int, rounds: int, *,
+                                 word_shards: int = 8, chunk: int = 64):
+    """§Perf iteration T1: 2-D (vertex × word) partitioning.
+
+    The baseline gathers the *full* closure table (V × W words) on every
+    device every round.  But the OR-recurrence is elementwise in the word
+    dimension, so a device that owns only ``W/word_shards`` words needs only
+    those words of every referenced row: re-viewing the flattened mesh as
+    ``(vertex_shards × word_shards)`` divides per-round gather traffic by
+    ``word_shards`` at identical per-device compute (each vertex shard is
+    ``word_shards×`` coarser, but processes ``word_shards×`` fewer words).
+    Edge lists are replicated across the word axis (static, once).
+    """
+    import numpy as _np
+    n_dev = mesh.devices.size
+    assert n_dev % word_shards == 0
+    v_shards = n_dev // word_shards
+    mesh2 = Mesh(mesh.devices.reshape(v_shards, word_shards),
+                 ("vtx", "word"))
+    per_v = -(-v_global // v_shards)
+    w_words = -(-nbits // 32)
+    assert w_words % word_shards == 0, (w_words, word_shards)
+    per_w = w_words // word_shards
+
+    spec_r = P("vtx", None, "word")       # [v_shards*?, per_v, words]
+    spec_e = P("vtx", None)               # edges replicated over word axis
+    sh_r = NamedSharding(mesh2, P("vtx", None, "word"))
+    sh_e = NamedSharding(mesh2, P("vtx", None))
+
+    @functools.partial(
+        shard_map, mesh=mesh2,
+        in_specs=(P("vtx", None, "word"), P("vtx", None), P("vtx", None),
+                  P("vtx", None)),
+        out_specs=P("vtx", None, "word"))
+    def run(rows_s, src_s, dst_s, valid_s):
+        rows_l = rows_s[0]                  # [per_v, per_w*32] bits as u8
+        src_e, dst_e, ok = src_s[0], dst_s[0], valid_s[0]
+        rows_l = rows_l.astype(jnp.bool_)
+        nb = rows_l.shape[-1]
+
+        def round_(r_local):
+            # gather over the vertex axis ONLY, with the payload PACKED
+            # into uint32 words (§Perf iteration T2: 32× fewer gather
+            # bytes than the bool-plane exchange; unpack is local VPU)
+            packed = bitset.pack_bits(r_local)
+            p_col = jax.lax.all_gather(packed, axis_name="vtx",
+                                       tiled=True)     # [V, per_w]
+            r_col = bitset.unpack_bits(p_col, nb)
+            gathered = r_col[dst_e] & ok[:, None]
+            upd = bitset.segment_or(gathered, src_e,
+                                    num_segments=r_local.shape[0],
+                                    chunk=chunk)
+            return r_local | upd
+
+        def body(_, r):
+            return round_(r)
+
+        return jax.lax.fori_loop(0, rounds, body, round_(rows_l))[None]
+
+    args = (
+        jax.ShapeDtypeStruct((v_shards, per_v, per_w * 32 * word_shards),
+                             jnp.uint8,
+                             sharding=NamedSharding(mesh2,
+                                                    P("vtx", None, "word"))),
+        jax.ShapeDtypeStruct((v_shards, e_max), jnp.int32, sharding=sh_e),
+        jax.ShapeDtypeStruct((v_shards, e_max), jnp.int32, sharding=sh_e),
+        jax.ShapeDtypeStruct((v_shards, e_max), jnp.bool_, sharding=sh_e),
+    )
+    with mesh2:
+        return jax.jit(run).lower(*args)
+
+
+def lower_distributed_closure(mesh: Mesh, v_global: int, e_max: int,
+                              nbits: int, rounds: int, chunk: int = 64):
+    """Shape-only lowering of the distributed fixpoint (for the dry-run).
+
+    Returns the lowered computation for ``.compile()`` — proving the
+    sharding/collective schedule is coherent on the production mesh without
+    allocating the graph.
+    """
+    n_shards = mesh.devices.size
+    axes = tuple(mesh.axis_names)
+    per = -(-v_global // n_shards)
+    v_pad = per * n_shards
+    spec = P(axes)
+    sharding = NamedSharding(mesh, spec)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(spec, spec, spec, spec), out_specs=spec)
+    def run(rows_s, src_s, dst_s, valid_s):
+        rows_l = rows_s[0].astype(jnp.bool_)
+        src_e, dst_e, ok = src_s[0], dst_s[0], valid_s[0]
+
+        def round_(r_local):
+            r_full = r_local
+            for ax in reversed(axes):
+                r_full = jax.lax.all_gather(r_full, axis_name=ax, tiled=True)
+            gathered = r_full[dst_e] & ok[:, None]
+            upd = bitset.segment_or(gathered, src_e, num_segments=per,
+                                    chunk=chunk)
+            return r_local | upd
+
+        def body(_, r):
+            return round_(r)
+
+        return jax.lax.fori_loop(0, rounds, body, round_(rows_l))[None]
+
+    args = (
+        jax.ShapeDtypeStruct((n_shards, per, nbits), jnp.uint8, sharding=sharding),
+        jax.ShapeDtypeStruct((n_shards, e_max), jnp.int32, sharding=sharding),
+        jax.ShapeDtypeStruct((n_shards, e_max), jnp.int32, sharding=sharding),
+        jax.ShapeDtypeStruct((n_shards, e_max), jnp.bool_, sharding=sharding),
+    )
+    return jax.jit(run).lower(*args)

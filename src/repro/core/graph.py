@@ -1,0 +1,139 @@
+"""Edge-labeled digraphs (paper Def. 1) + the generators used in §VI.
+
+A multigraph edge with several labels is stored as several parallel edges,
+exactly as the paper prescribes.  Host representation is CSR (sorted by
+source) with a parallel label array; reverse CSR is derived lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """CSR edge-labeled digraph."""
+    n_vertices: int
+    n_labels: int
+    indptr: np.ndarray    # int32 [V+1]
+    indices: np.ndarray   # int32 [E]   destination of each edge
+    labels: np.ndarray    # int32 [E]   label of each edge
+
+    # ---------------------------------------------------------------- basic
+    @property
+    def n_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def src(self) -> np.ndarray:
+        """Edge source array [E] (expanded from indptr)."""
+        return np.repeat(np.arange(self.n_vertices, dtype=np.int32),
+                         np.diff(self.indptr))
+
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    def successors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+    def out_edges(self, u: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[u], self.indptr[u + 1]
+        return self.indices[s:e], self.labels[s:e]
+
+    def reverse(self) -> "Graph":
+        src = self.src
+        order = np.argsort(self.indices, kind="stable")
+        rsrc = self.indices[order]
+        rdst = src[order]
+        rlab = self.labels[order]
+        rptr = np.zeros(self.n_vertices + 1, dtype=np.int64)
+        np.add.at(rptr, rsrc + 1, 1)
+        rptr = np.cumsum(rptr)
+        return Graph(self.n_vertices, self.n_labels,
+                     rptr.astype(np.int32), rdst.astype(np.int32),
+                     rlab.astype(np.int32))
+
+    # ------------------------------------------------------------ builders
+    @staticmethod
+    def from_edges(n_vertices: int, n_labels: int,
+                   edges: Iterable[tuple[int, int, int]]) -> "Graph":
+        arr = np.asarray(sorted(set(edges)), dtype=np.int64)
+        if arr.size == 0:
+            arr = np.zeros((0, 3), dtype=np.int64)
+        src, dst, lab = arr[:, 0], arr[:, 1], arr[:, 2]
+        order = np.lexsort((dst, src))
+        src, dst, lab = src[order], dst[order], lab[order]
+        indptr = np.zeros(n_vertices + 1, dtype=np.int64)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr)
+        return Graph(n_vertices, n_labels, indptr.astype(np.int32),
+                     dst.astype(np.int32), lab.astype(np.int32))
+
+
+# -------------------------------------------------------------- generators
+def erdos_renyi(n_vertices: int, avg_degree: float, n_labels: int,
+                seed: int = 0) -> Graph:
+    """ER digraph (§VI-A): ~uniform out-degree, labels uniform on edges."""
+    rng = np.random.default_rng(seed)
+    n_edges = int(n_vertices * avg_degree)
+    src = rng.integers(0, n_vertices, size=n_edges)
+    dst = rng.integers(0, n_vertices, size=n_edges)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    lab = rng.integers(0, n_labels, size=src.shape[0])
+    return Graph.from_edges(n_vertices, n_labels,
+                            zip(src.tolist(), dst.tolist(), lab.tolist()))
+
+
+def preferential_attachment(n_vertices: int, avg_degree: float,
+                            n_labels: int, seed: int = 0) -> Graph:
+    """PA digraph (§VI-A): skewed out-degree (Barabási–Albert flavoured).
+
+    Each new vertex attaches ``m = avg_degree/2`` out-edges to targets drawn
+    proportionally to in-degree+1, plus receives edges from random earlier
+    vertices — yielding the skew the paper relies on.
+    """
+    rng = np.random.default_rng(seed)
+    m = max(1, int(round(avg_degree / 2)))
+    edges: list[tuple[int, int, int]] = []
+    weight = np.ones(n_vertices, dtype=np.float64)
+    for v in range(1, n_vertices):
+        w = weight[:v] / weight[:v].sum()
+        k = min(m, v)
+        targets = rng.choice(v, size=k, replace=False, p=w)
+        for t in targets:
+            edges.append((v, int(t), int(rng.integers(0, n_labels))))
+            weight[t] += 1.0
+        sources = rng.integers(0, v, size=m)
+        for s in sources:
+            edges.append((int(s), v, int(rng.integers(0, n_labels))))
+            weight[v] += 1.0
+    return Graph.from_edges(n_vertices, n_labels, edges)
+
+
+def fig2_example() -> Graph:
+    """A 10-vertex, 5-label digraph consistent with the paper's Fig. 2 /
+    Examples 1–3 (labels a..e = 0..4)."""
+    a, b, c, d, e = range(5)
+    edges = [
+        (0, 1, a), (0, 2, a), (0, 2, b), (0, 8, e),
+        (1, 3, d),
+        (2, 5, c),
+        (3, 5, b),
+        (4, 6, b),
+        (5, 9, c),
+        (7, 2, a), (7, 8, a), (7, 9, b), (7, 9, e),
+        (8, 4, b),
+    ]
+    return Graph.from_edges(10, 5, edges)
+
+
+def random_graph(kind: str, n_vertices: int, avg_degree: float,
+                 n_labels: int, seed: int = 0) -> Graph:
+    if kind == "er":
+        return erdos_renyi(n_vertices, avg_degree, n_labels, seed)
+    if kind == "pa":
+        return preferential_attachment(n_vertices, avg_degree, n_labels, seed)
+    raise ValueError(f"unknown graph kind {kind!r}")

@@ -1,0 +1,106 @@
+"""LCR queries on top of the PCR engine (+ a P2H-style full-index baseline).
+
+LCR(u, v, A) — "is v reachable from u using only labels in A?" — translates
+to the PCR pattern ``⋀_{l ∉ A} ¬l`` (paper §VI-C translates the other way
+round when comparing against P2H+/PDU).  The baseline here, ``P2HLite``,
+mirrors what P2H+ stores: for every vertex the full set of reachable
+vertices together with the *minimal* label sets of connecting paths.  It is
+exact and O(1)-ish at query time but exponential to build — which is the
+paper's whole point, and exactly what ``benchmarks/index_cost.py`` measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Sequence
+
+import numpy as np
+
+from . import pattern as pat
+from .graph import Graph
+from .tdr_build import TDRIndex
+from . import tdr_query
+
+
+def answer_lcr_batch(index: TDRIndex,
+                     queries: Sequence[tuple[int, int, Sequence[int]]],
+                     **kw) -> np.ndarray:
+    """Answer LCR queries (u, v, allowed-labels) via the PCR engine."""
+    n_labels = index.graph.n_labels
+    pcr = [(u, v, pat.lcr(sorted(allowed), n_labels))
+           for (u, v, allowed) in queries]
+    return tdr_query.answer_batch(index, pcr, **kw)
+
+
+# ------------------------------------------------------------ P2H baseline
+def _minimal(sets: set[FrozenSet[int]]) -> set[FrozenSet[int]]:
+    out: set[FrozenSet[int]] = set()
+    for s in sorted(sets, key=len):
+        if not any(t < s or t == s for t in out):
+            out.add(s)
+    return out
+
+
+@dataclasses.dataclass
+class P2HLite:
+    """Full reachability index: per source, minimal label sets per target.
+
+    ``out[u][v]`` = antichain of minimal label sets of u→v paths.  Build is
+    a label-set worklist fixpoint — complete, and deliberately as expensive
+    as full indices are (the paper's Table IV story).
+    """
+    out: list[dict[int, set[FrozenSet[int]]]]
+
+    @staticmethod
+    def build(graph: Graph, max_sets_per_pair: int = 64) -> "P2HLite":
+        v_n = graph.n_vertices
+        out: list[dict[int, set[FrozenSet[int]]]] = [dict() for _ in range(v_n)]
+        # initialise with direct edges
+        work = set()
+        for u in range(v_n):
+            dsts, labs = graph.out_edges(u)
+            for v, l in zip(dsts.tolist(), labs.tolist()):
+                s = frozenset((l,))
+                cur = out[u].setdefault(v, set())
+                if s not in cur:
+                    cur.add(s)
+                    work.add(u)
+            for v in out[u]:
+                out[u][v] = _minimal(out[u][v])
+        # propagate: out[u] ← minimal(out[u] ∪ {l∪s : (u,w,l), s∈out[w]})
+        rev = graph.reverse()
+        changed = True
+        while changed:
+            changed = False
+            for u in range(v_n):
+                dsts, labs = graph.out_edges(u)
+                new: dict[int, set[FrozenSet[int]]] = {}
+                for w, l in zip(dsts.tolist(), labs.tolist()):
+                    for v, sets in out[w].items():
+                        for s in sets:
+                            ns = s | {l}
+                            new.setdefault(v, set()).add(ns)
+                for v, sets in new.items():
+                    cur = out[u].setdefault(v, set())
+                    before = frozenset(cur)
+                    merged = _minimal(cur | sets)
+                    if len(merged) > max_sets_per_pair:
+                        merged = set(sorted(merged, key=len)
+                                     [:max_sets_per_pair])
+                    if frozenset(merged) != before:
+                        out[u][v] = merged
+                        changed = True
+        return P2HLite(out)
+
+    def query(self, u: int, v: int, allowed: Sequence[int]) -> bool:
+        if u == v:
+            return True      # empty path (matches the PCR semantics)
+        a = frozenset(allowed)
+        return any(s <= a for s in self.out[u].get(v, ()))
+
+    def size_bytes(self) -> int:
+        total = 0
+        for d in self.out:
+            for v, sets in d.items():
+                total += 8  # vertex id + header
+                total += sum(8 + 4 * len(s) for s in sets)
+        return total

@@ -1,0 +1,330 @@
+"""TDR index construction (paper §IV, Alg. 1) — TPU-native formulation.
+
+The paper builds the index by a bottom-up DFS merging child bitsets into
+parents.  That is a pointer-chasing, serially-dependent loop; here the same
+fixpoint is computed *level-synchronously*:
+
+    R ← R  ∨  (A ⊗ R)        (boolean-OR semiring, one round per level)
+
+which converges in ≤ diameter rounds and makes every round a dense batched
+OR-reduction — the shape TPUs (and ``repro.kernels.bitset_matmul``) want.
+The result is bit-identical to the DFS build: both compute the closure of the
+OR-recurrence ``R[u] = ⋁_{(u,v,l)∈E} (bit(v) ∨ R[v])``.
+
+Index anatomy (per vertex ``u``, ``G`` ways, ``k`` vertical levels):
+
+* ``H_vtx [V,G,Wv]``  — horizontal reachable-vertex Bloom masks per way
+* ``H_lab [V,G,Wl]``  — horizontal path-label masks per way
+* ``V_vtx [V,G,k,Wv]``— vertical per-level vertex masks (hop ℓ+1)
+* ``V_lab [V,G,k,Wl]``— vertical per-level label masks (+ NULL bit for
+  paths that ended before the level — the paper's virtual null edges)
+* ``N_out/N_in [V,Wv]`` — 1-way global closure Blooms (forward / reverse)
+* ``push/pop [V]``    — DFS-forest intervals (ancestor ⇒ reachable)
+
+Hashing follows the paper: label bits are identity-mapped while they fit
+(else multiplicative), vertex bits use *discovery-order block hashing* — the
+paper's "hash consecutive vertices along the path to the same value" trick —
+plus an optional second multiplicative hash (Bloom double-hashing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitset
+from .graph import Graph
+
+
+# ---------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class TDRConfig:
+    vtx_bits: int = 256          # Bloom width for vertex sets (per way)
+    lab_slots: int = 63          # label slots (identity if n_labels fits)
+    g_max: int = 4               # max ways per vertex
+    succ_per_way: int = 4        # target successors per way (sets g(u))
+    k: int = 3                   # vertical levels
+    n_hashes: int = 2            # Bloom hashes per vertex
+    hash_scheme: str = "dfs-block"   # "dfs-block" | "mult"
+    max_fixpoint_iters: int = 0  # 0 -> |V| (safe upper bound)
+    bit_chunk: int = 64          # word-chunk for segment ORs
+
+    @property
+    def lab_bits(self) -> int:
+        return self.lab_slots + 1  # + NULL bit
+
+    @property
+    def null_bit(self) -> int:
+        return self.lab_slots
+
+
+# ----------------------------------------------------------------- index
+@dataclasses.dataclass
+class TDRIndex:
+    cfg: TDRConfig
+    graph: Graph
+    # packed uint32 device arrays
+    h_vtx: jax.Array      # [V, G, Wv]
+    h_lab: jax.Array      # [V, G, Wl]
+    v_vtx: jax.Array      # [V, G, k, Wv]
+    v_lab: jax.Array      # [V, G, k, Wl]
+    n_out: jax.Array      # [V, Wv]
+    n_in: jax.Array       # [V, Wv]
+    push: jax.Array       # [V] int32
+    pop: jax.Array        # [V] int32
+    g_count: jax.Array    # [V] int32 (ways actually used)
+    # host-side hash tables
+    vtx_bit_rows: np.ndarray   # bool [V, vtx_bits] — hash pattern of each vertex
+    lab_slot: np.ndarray       # int32 [L] — label -> slot
+    fixpoint_rounds: int = 0
+    _vtx_packed: "jax.Array | None" = None   # cached packed hash rows
+
+    @property
+    def vtx_packed(self) -> jax.Array:
+        if self._vtx_packed is None:
+            object.__setattr__ if False else setattr(
+                self, "_vtx_packed",
+                jnp.asarray(bitset.pack_bits_np(self.vtx_bit_rows)))
+        return self._vtx_packed
+
+    def size_bytes(self, logical: bool = True) -> int:
+        """Index footprint.  ``logical`` counts only the ways in use (the
+        paper's accounting); otherwise the dense padded layout."""
+        g = np.asarray(self.g_count)
+        wv = self.h_vtx.shape[-1]
+        wl = self.h_lab.shape[-1]
+        k = self.v_lab.shape[2]
+        per_way = 4 * (wv + wl + k * (wv + wl))
+        ways = int(g.sum()) if logical else int(g.shape[0] * self.cfg.g_max)
+        fixed = self.n_out.size * 4 + self.n_in.size * 4 + 2 * 4 * g.shape[0]
+        return ways * per_way + fixed
+
+
+# --------------------------------------------------------- host precompute
+def dfs_intervals(graph: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Iterative DFS forest: push/pop counters + discovery order."""
+    v_n = graph.n_vertices
+    indptr, indices = graph.indptr, graph.indices
+    push = np.full(v_n, -1, dtype=np.int64)
+    pop = np.full(v_n, -1, dtype=np.int64)
+    disc = np.full(v_n, -1, dtype=np.int64)
+    t = 0
+    d = 0
+    # prefer true roots (no predecessors) first, matching the paper
+    in_deg = np.zeros(v_n, dtype=np.int64)
+    np.add.at(in_deg, indices, 1)
+    order = np.concatenate([np.flatnonzero(in_deg == 0),
+                            np.flatnonzero(in_deg != 0)])
+    for root in order:
+        if push[root] >= 0:
+            continue
+        stack = [(int(root), int(indptr[root]))]
+        push[root] = t; t += 1
+        disc[root] = d; d += 1
+        while stack:
+            u, i = stack[-1]
+            if i < indptr[u + 1]:
+                stack[-1] = (u, i + 1)
+                w = int(indices[i])
+                if push[w] < 0:
+                    push[w] = t; t += 1
+                    disc[w] = d; d += 1
+                    stack.append((w, int(indptr[w])))
+            else:
+                stack.pop()
+                pop[u] = t; t += 1
+    return push.astype(np.int32), pop.astype(np.int32), disc.astype(np.int32)
+
+
+def _vertex_bit_rows(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
+    """Bloom bit pattern per vertex (bool [V, vtx_bits])."""
+    v_n = disc.shape[0]
+    rows = np.zeros((v_n, cfg.vtx_bits), dtype=bool)
+    ids = np.arange(v_n, dtype=np.uint64)
+    if cfg.hash_scheme == "dfs-block":
+        # consecutive discovery order -> same bit (paper's locality hashing)
+        h0 = (disc.astype(np.uint64) * np.uint64(cfg.vtx_bits)) // np.uint64(
+            max(v_n, 1))
+    else:
+        h0 = ((ids + 1) * np.uint64(2654435761)) % np.uint64(cfg.vtx_bits)
+    rows[np.arange(v_n), h0.astype(np.int64) % cfg.vtx_bits] = True
+    ks = [np.uint64(0x9E3779B97F4A7C15), np.uint64(0xC2B2AE3D27D4EB4F),
+          np.uint64(0x165667B19E3779F9)]
+    for i in range(1, cfg.n_hashes):
+        h = (((ids + 1) * ks[(i - 1) % len(ks)]) >> np.uint64(17)) % np.uint64(
+            cfg.vtx_bits)
+        rows[np.arange(v_n), h.astype(np.int64)] = True
+    return rows
+
+
+def _label_slots(cfg: TDRConfig, n_labels: int) -> np.ndarray:
+    ids = np.arange(n_labels, dtype=np.uint64)
+    if n_labels <= cfg.lab_slots:
+        return ids.astype(np.int32)
+    return (((ids + 1) * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(13)
+            ).astype(np.int64).astype(np.int32) % np.int32(cfg.lab_slots)
+
+
+def way_assignment(cfg: TDRConfig, graph: Graph,
+                   disc: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-vertex way count g(u) and per-edge way id.
+
+    The paper sets ``g = hash(|Suc(u)|)`` (degree-adaptive); we use the same
+    intent with a static cap: ``g(u) = min(next_pow2(ceil(deg/succ_per_way)),
+    g_max)``; successors are routed by discovery-order hash for locality.
+    """
+    deg = graph.out_degree().astype(np.int64)
+    g = np.zeros_like(deg)
+    nz = deg > 0
+    tgt = np.maximum(1, -(-deg[nz] // cfg.succ_per_way))
+    g[nz] = np.minimum(2 ** np.ceil(np.log2(tgt)).astype(np.int64), cfg.g_max)
+    src = graph.src
+    way = (disc[graph.indices].astype(np.int64) % np.maximum(g[src], 1))
+    return g.astype(np.int32), way.astype(np.int32)
+
+
+# ----------------------------------------------------------- device build
+@functools.partial(jax.jit, static_argnames=("v_n", "nbits", "max_iters",
+                                             "chunk"))
+def _closure_fixpoint(base: jax.Array, edge_src: jax.Array,
+                      edge_dst: jax.Array, *, v_n: int, nbits: int,
+                      max_iters: int, chunk: int) -> tuple[jax.Array, jax.Array]:
+    """R = lfp( R ∨ base ∨ OR_{(u,v)} R[v] ) as level-synchronous rounds."""
+
+    def round_(r):
+        gathered = r[edge_dst]
+        upd = bitset.segment_or(gathered, edge_src, num_segments=v_n,
+                                chunk=chunk)
+        return r | upd
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, _, it = state
+        nr = round_(r)
+        return nr, jnp.any(nr != r), it + 1
+
+    r0 = base
+    r, _, rounds = jax.lax.while_loop(cond, body,
+                                      (r0, jnp.bool_(True), jnp.int32(0)))
+    return r, rounds
+
+
+def build_index(graph: Graph, cfg: TDRConfig = TDRConfig()) -> TDRIndex:
+    """Construct the full TDR index for every vertex of ``graph``."""
+    v_n, e_n = graph.n_vertices, graph.n_edges
+    push, pop, disc = dfs_intervals(graph)
+    vtx_rows_np = _vertex_bit_rows(cfg, disc)
+    lab_slot = _label_slots(cfg, graph.n_labels)
+    g_count, way = way_assignment(cfg, graph, disc)
+
+    src = jnp.asarray(graph.src)
+    dst = jnp.asarray(graph.indices)
+    elab = jnp.asarray(graph.labels)
+    vtx_rows = jnp.asarray(vtx_rows_np)
+    deg = jnp.asarray(graph.out_degree())
+    is_leaf = deg == 0
+
+    # per-edge label bit plane [E, lab_bits]
+    lab_rows = jnp.zeros((e_n, cfg.lab_bits), dtype=jnp.bool_)
+    lab_rows = lab_rows.at[jnp.arange(e_n),
+                           jnp.asarray(lab_slot)[elab]].set(True)
+
+    max_iters = cfg.max_fixpoint_iters or v_n
+    chunk = cfg.bit_chunk
+
+    # ---- forward vertex closure  R[u] = OR (bit(v) | R[v]) --------------
+    base_v = bitset.segment_or(vtx_rows[dst], src, num_segments=v_n,
+                               chunk=chunk)
+    r_vtx, rounds = _closure_fixpoint(base_v, src, dst, v_n=v_n,
+                                      nbits=cfg.vtx_bits,
+                                      max_iters=max_iters, chunk=chunk)
+
+    # ---- forward label closure  Rl[u] = OR (bit(l) | Rl[v]) -------------
+    base_l = bitset.segment_or(lab_rows, src, num_segments=v_n, chunk=chunk)
+    r_lab, _ = _closure_fixpoint(base_l, src, dst, v_n=v_n,
+                                 nbits=cfg.lab_bits, max_iters=max_iters,
+                                 chunk=chunk)
+
+    # ---- reverse closure for N_in ---------------------------------------
+    base_r = bitset.segment_or(vtx_rows[src], dst, num_segments=v_n,
+                               chunk=chunk)
+    n_in, _ = _closure_fixpoint(base_r, dst, src, v_n=v_n,
+                                nbits=cfg.vtx_bits, max_iters=max_iters,
+                                chunk=chunk)
+
+    # ---- vertical levels (exact k-round propagation) --------------------
+    null_row = jnp.zeros((cfg.lab_bits,), jnp.bool_).at[cfg.null_bit].set(True)
+    d_lab_levels = []   # D_lab[:, l] — labels at hop l+1 from each vertex
+    d_vtx_levels = []   # D_vtx[:, l] — vertices at hop l+1
+    cur_lab = jnp.where(is_leaf[:, None], null_row[None, :], base_l)
+    cur_vtx = base_v
+    d_lab_levels.append(cur_lab)
+    d_vtx_levels.append(cur_vtx)
+    for _ in range(1, cfg.k):
+        nxt_lab = bitset.segment_or(cur_lab[dst], src, num_segments=v_n,
+                                    chunk=chunk)
+        nxt_lab = jnp.where(is_leaf[:, None], null_row[None, :], nxt_lab)
+        nxt_vtx = bitset.segment_or(cur_vtx[dst], src, num_segments=v_n,
+                                    chunk=chunk)
+        nxt_vtx = jnp.where(is_leaf[:, None], False, nxt_vtx)
+        d_lab_levels.append(nxt_lab)
+        d_vtx_levels.append(nxt_vtx)
+        cur_lab, cur_vtx = nxt_lab, nxt_vtx
+    d_lab = jnp.stack(d_lab_levels, axis=1)   # [V, k, lab_bits]
+    d_vtx = jnp.stack(d_vtx_levels, axis=1)   # [V, k, vtx_bits]
+
+    # ---- per-way projections --------------------------------------------
+    gmax = cfg.g_max
+    seg = src * gmax + jnp.asarray(way)
+    n_seg = v_n * gmax
+
+    h_vtx = bitset.segment_or(vtx_rows[dst] | r_vtx[dst], seg,
+                              num_segments=n_seg, chunk=chunk)
+    h_lab = bitset.segment_or(lab_rows | r_lab[dst], seg,
+                              num_segments=n_seg, chunk=chunk)
+    v_lab0 = bitset.segment_or(lab_rows, seg, num_segments=n_seg, chunk=chunk)
+    v_vtx0 = bitset.segment_or(vtx_rows[dst], seg, num_segments=n_seg,
+                               chunk=chunk)
+    v_lab_lv = [v_lab0]
+    v_vtx_lv = [v_vtx0]
+    for l in range(1, cfg.k):
+        v_lab_lv.append(bitset.segment_or(d_lab[dst, l - 1], seg,
+                                          num_segments=n_seg, chunk=chunk))
+        v_vtx_lv.append(bitset.segment_or(d_vtx[dst, l - 1], seg,
+                                          num_segments=n_seg, chunk=chunk))
+
+    h_vtx = h_vtx.reshape(v_n, gmax, cfg.vtx_bits)
+    h_lab = h_lab.reshape(v_n, gmax, cfg.lab_bits)
+    v_lab = jnp.stack(v_lab_lv, axis=1).reshape(v_n, gmax, cfg.k,
+                                                cfg.lab_bits)
+    v_vtx = jnp.stack(v_vtx_lv, axis=1).reshape(v_n, gmax, cfg.k,
+                                                cfg.vtx_bits)
+
+    # the vertex hashes itself into each *used* way (paper Alg. 1 line 10)
+    way_used = jnp.arange(gmax)[None, :] < jnp.asarray(g_count)[:, None]
+    h_vtx = h_vtx | (vtx_rows[:, None, :] & way_used[:, :, None])
+
+    n_out = jnp.any(h_vtx, axis=1) if gmax > 0 else r_vtx
+    n_out = n_out | vtx_rows  # self is "reachable" for membership filtering
+
+    idx = TDRIndex(
+        cfg=cfg, graph=graph,
+        h_vtx=bitset.pack_bits(h_vtx),
+        h_lab=bitset.pack_bits(h_lab),
+        v_vtx=bitset.pack_bits(v_vtx),
+        v_lab=bitset.pack_bits(v_lab),
+        n_out=bitset.pack_bits(n_out),
+        n_in=bitset.pack_bits(n_in | vtx_rows),
+        push=jnp.asarray(push), pop=jnp.asarray(pop),
+        g_count=jnp.asarray(g_count),
+        vtx_bit_rows=vtx_rows_np, lab_slot=lab_slot,
+        fixpoint_rounds=int(rounds),
+    )
+    return idx

@@ -1,0 +1,347 @@
+"""Answering PCR queries with the TDR index (paper §V, Alg. 2) — batched.
+
+The paper's Alg. 2 interleaves pruning with a DFS.  On TPU we split the same
+logic into two phases, both batched over the whole query set:
+
+Phase 1 — *filter cascade* (pure index math, no traversal):
+  * ``u == v``            -> TRUE iff the term requires no labels
+  * ``bits(v) ⊄ N_out(u)``-> FALSE   (paper: VertexReach)
+  * ``bits(u) ⊄ N_in(v)`` -> FALSE   (paper: VertexReach, reverse)
+  * interval ancestor + unconstrained term -> TRUE (paper: early stopping)
+  * per-way group pruning: way g survives iff
+      - ``bits(v) ⊆ H_vtx[u,g]``          (target may be in the way)
+      - ``req    ⊆ H_lab[u,g]``           (required labels may appear)
+      - no vertical level ℓ<k refutes it: a level refutes when *every*
+        real label at hop ℓ+1 is forbidden while v provably was not reached
+        within ℓ hops (paper: path-index pruning / early stopping)
+    no surviving way -> FALSE
+  * everything else -> UNKNOWN, goes to phase 2.
+
+Phase 2 — *exact product-graph expansion* for survivors only: frontier over
+states ``(vertex, subset of required labels seen)`` with forbidden edges
+deleted and the frontier confined to the Bloom *corridor*
+``V_out(u) ∩ V_in(v)`` (the index applied inside the search — the paper's
+VertexReach at every step, vectorised).  The expansion is the same
+boolean-semiring product the index build uses, so answers are exact:
+property tests assert bit-equality with the DFS oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitset
+from . import pattern as pat
+from .graph import Graph
+from .tdr_build import TDRIndex
+
+FALSE, TRUE, UNKNOWN = 0, 1, 2
+
+
+# ------------------------------------------------------------------- jobs
+@dataclasses.dataclass
+class QueryBatch:
+    """One flattened DNF-term job per row."""
+    qid: np.ndarray        # [J] query id
+    u: np.ndarray          # [J]
+    v: np.ndarray          # [J]
+    req_plane: np.ndarray  # bool [J, lab_bits]  required-label slots
+    forb_plane: np.ndarray # bool [J, lab_bits]  forbidden-label slots
+    req_labels: np.ndarray # int32 [J, max_m]    raw label ids, -1 padded
+    forb_raw: np.ndarray   # bool [J, L]         raw forbidden labels
+    n_queries: int
+
+
+@dataclasses.dataclass
+class QueryStats:
+    n_queries: int = 0
+    n_jobs: int = 0
+    filter_false: int = 0
+    filter_true: int = 0
+    exact_jobs: int = 0
+    exact_rounds: int = 0
+
+
+def compile_queries(index: TDRIndex,
+                    queries: Sequence[tuple[int, int, pat.Pattern]],
+                    max_m: int = 4) -> QueryBatch:
+    cfg = index.cfg
+    n_lab = index.graph.n_labels
+    qid, us, vs, reqp, forbp, reql, forbr = [], [], [], [], [], [], []
+    for qi, (u, v, p) in enumerate(queries):
+        for term in pat.to_dnf(p):
+            if len(term.require) > max_m:
+                raise ValueError(
+                    f"term with {len(term.require)} required labels exceeds "
+                    f"max_m={max_m}; decompose the pattern")
+            rp = np.zeros(cfg.lab_bits, dtype=bool)
+            fp = np.zeros(cfg.lab_bits, dtype=bool)
+            fr = np.zeros(n_lab, dtype=bool)
+            for l in term.require:
+                rp[index.lab_slot[l]] = True
+            for l in term.forbid:
+                fp[index.lab_slot[l]] = True
+                fr[l] = True
+            rl = sorted(term.require) + [-1] * (max_m - len(term.require))
+            qid.append(qi); us.append(u); vs.append(v)
+            reqp.append(rp); forbp.append(fp); reql.append(rl); forbr.append(fr)
+    if not qid:  # all-false patterns
+        return QueryBatch(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                          np.zeros(0, np.int32),
+                          np.zeros((0, cfg.lab_bits), bool),
+                          np.zeros((0, cfg.lab_bits), bool),
+                          np.zeros((0, max_m), np.int32),
+                          np.zeros((0, n_lab), bool), len(queries))
+    return QueryBatch(np.asarray(qid, np.int32), np.asarray(us, np.int32),
+                      np.asarray(vs, np.int32),
+                      np.stack(reqp), np.stack(forbp),
+                      np.asarray(reql, np.int32), np.stack(forbr),
+                      len(queries))
+
+
+# ----------------------------------------------------------- phase 1 (jit)
+@functools.partial(jax.jit, static_argnames=("k",))
+def _filter_cascade(u, v, req_plane, forb_plane, null_plane,
+                    vtx_rows_packed, h_vtx, h_lab, v_vtx, v_lab,
+                    n_out, n_in, push, pop, *, k: int):
+    """Vectorised filter cascade -> verdict [J] in {FALSE, TRUE, UNKNOWN}."""
+    req_w = bitset.pack_bits(req_plane)
+    forb_w = bitset.pack_bits(forb_plane)
+    vbits = vtx_rows_packed[v]            # [J, Wv]
+    ubits = vtx_rows_packed[u]
+
+    req_empty = jnp.all(~req_plane, axis=-1)
+    forb_empty = jnp.all(~forb_plane, axis=-1)
+
+    # u == v: empty path
+    same = u == v
+    true_same = same & req_empty
+
+    # global membership filters (sound negatives)
+    topo_out = bitset.words_contain(n_out[u], vbits)
+    topo_in = bitset.words_contain(n_in[v], ubits)
+    topo_maybe = topo_out & topo_in
+
+    # interval: DFS-forest ancestor => topologically reachable (sound positive)
+    anc = (push[u] < push[v]) & (pop[v] < pop[u])
+    true_anc = anc & req_empty & forb_empty & ~same
+
+    # ---- per-way group pruning ----
+    hv = h_vtx[u]                          # [J, G, Wv]
+    hl = h_lab[u]                          # [J, G, Wl]
+    way_has_target = bitset.words_contain(hv, vbits[:, None, :])
+    way_has_req = bitset.words_contain(hl, req_w[:, None, :])
+
+    # vertical refutation per level
+    vl = v_lab[u]                          # [J, G, k, Wl]
+    vv = v_vtx[u]                          # [J, G, k, Wv]
+    # level blocked: every *real* label at hop l+1 is forbidden (the NULL
+    # bit marks paths that already ended -- those cannot continue either,
+    # so it is excluded from the "still traversable" test)
+    blocked = jnp.all(
+        (vl & ~forb_w[:, None, None, :] & ~null_plane[None, None, None, :])
+        == 0, axis=-1)                     # [J, G, k]
+    # v reached within <= l hops? (levels 0..l-1)
+    reached = bitset.words_contain(vv, vbits[:, None, None, :])  # [J,G,k]
+    reached_upto = jnp.cumsum(reached.astype(jnp.int32), axis=-1) > 0
+    # refute at level l: blocked[l] and not reached within l hops
+    not_reached_before = jnp.concatenate(
+        [jnp.ones_like(reached_upto[..., :1]),
+         ~reached_upto[..., :-1]], axis=-1)
+    refuted = jnp.any(blocked & not_reached_before, axis=-1)  # [J, G]
+
+    way_ok = way_has_target & way_has_req & ~refuted
+    any_way = jnp.any(way_ok, axis=-1)
+
+    maybe = topo_maybe & (any_way | same)
+    verdict = jnp.where(true_same | true_anc, TRUE,
+                        jnp.where(maybe, UNKNOWN, FALSE))
+    # u==v with required labels: no path; it's FALSE only if no self-loop
+    # cycle can satisfy -- conservative: keep UNKNOWN path for same-vertex
+    # queries with labels (cycles through u can satisfy the pattern).
+    verdict = jnp.where(same & ~req_empty,
+                        jnp.where(any_way, UNKNOWN, FALSE), verdict)
+    return verdict
+
+
+# ----------------------------------------------------------- phase 2 (jit)
+@functools.partial(jax.jit, static_argnames=("v_n", "n_states", "max_rounds"))
+def _exact_expand(u, v, edge_ok, edge_sbit, full_mask, corridor,
+                  edge_src, edge_dst, *, v_n: int, n_states: int,
+                  max_rounds: int):
+    """Batched product-graph reachability.
+
+    Args:
+      u, v:        [Q] endpoints
+      edge_ok:     [Q, E] edge not forbidden
+      edge_sbit:   [Q, E] subset bit contributed by the edge's label (0 if
+                   the label is not required)
+      full_mask:   [Q]    target subset state
+      corridor:    [Q, V] Bloom corridor V_out(u) ∩ V_in(v)
+    Returns: reached [Q] bool, rounds int32
+    """
+    q_n, e_n = edge_ok.shape
+    states = jnp.arange(n_states, dtype=jnp.int32)
+
+    f0 = jnp.zeros((q_n, n_states, v_n), dtype=jnp.bool_)
+    f0 = f0.at[jnp.arange(q_n), 0, u].set(True)
+
+    def one_round(f):
+        def per_query(fq, okq, sbitq, corq):
+            val = fq[:, edge_src] & okq[None, :]          # [S, E]
+            tgt_state = states[:, None] | sbitq[None, :]   # [S, E]
+            seg = tgt_state * v_n + edge_dst[None, :]
+            upd = jax.ops.segment_max(
+                val.reshape(-1).astype(jnp.uint8), seg.reshape(-1),
+                num_segments=n_states * v_n)
+            upd = upd.reshape(n_states, v_n).astype(jnp.bool_)
+            return fq | (upd & corq[None, :])
+        return jax.vmap(per_query)(f, edge_ok, edge_sbit, corridor)
+
+    def done_of(f):
+        return f[jnp.arange(q_n), full_mask, v]
+
+    def cond(state):
+        f, prev_f, it, _ = state
+        changed = jnp.any(f != prev_f)
+        return jnp.logical_and(changed, jnp.logical_and(
+            ~jnp.all(done_of(f)), it < max_rounds))
+
+    def body(state):
+        f, _, it, _ = state
+        nf = one_round(f)
+        return nf, f, it + 1, done_of(nf)
+
+    f1 = one_round(f0)
+    state = (f1, f0, jnp.int32(1), done_of(f1))
+    f, _, rounds, _ = jax.lax.while_loop(cond, body, state)
+    return done_of(f), rounds
+
+
+# ----------------------------------------------------------------- driver
+def _pad_pow2(n: int, lo: int = 16) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def answer_batch(index: TDRIndex,
+                 queries: Sequence[tuple[int, int, pat.Pattern]],
+                 *, max_m: int = 4, exact_chunk: int = 16,
+                 stats: QueryStats | None = None,
+                 filters_only: bool = False) -> np.ndarray:
+    """Answer a batch of PCR queries.  Returns bool [n_queries]."""
+    g = index.graph
+    batch = compile_queries(index, queries, max_m=max_m)
+    stats = stats if stats is not None else QueryStats()
+    stats.n_queries += batch.n_queries
+    stats.n_jobs += len(batch.qid)
+    answers = np.zeros(batch.n_queries, dtype=bool)
+    if len(batch.qid) == 0:
+        return answers
+
+    # pad the job axis to a power of two so jit shapes stay stable across
+    # batches (padding rows are self-queries with empty patterns -> TRUE,
+    # but their qid=-1 so they never land in `answers`)
+    j = len(batch.qid)
+    jp = _pad_pow2(j)
+    if jp != j:
+        pad = jp - j
+        batch = QueryBatch(
+            np.concatenate([batch.qid, np.full(pad, -1, np.int32)]),
+            np.concatenate([batch.u, np.zeros(pad, np.int32)]),
+            np.concatenate([batch.v, np.zeros(pad, np.int32)]),
+            np.concatenate([batch.req_plane,
+                            np.zeros((pad,) + batch.req_plane.shape[1:],
+                                     bool)]),
+            np.concatenate([batch.forb_plane,
+                            np.zeros((pad,) + batch.forb_plane.shape[1:],
+                                     bool)]),
+            np.concatenate([batch.req_labels,
+                            np.full((pad, max_m), -1, np.int32)]),
+            np.concatenate([batch.forb_raw,
+                            np.zeros((pad,) + batch.forb_raw.shape[1:],
+                                     bool)]),
+            batch.n_queries)
+
+    vtx_packed = index.vtx_packed
+    null_plane_np = np.zeros(index.cfg.lab_bits, dtype=bool)
+    null_plane_np[index.cfg.null_bit] = True
+    null_plane = bitset.pack_bits(jnp.asarray(null_plane_np))
+    verdict = np.asarray(_filter_cascade(
+        jnp.asarray(batch.u), jnp.asarray(batch.v),
+        jnp.asarray(batch.req_plane), jnp.asarray(batch.forb_plane),
+        null_plane,
+        vtx_packed, index.h_vtx, index.h_lab, index.v_vtx, index.v_lab,
+        index.n_out, index.n_in, index.push, index.pop, k=index.cfg.k))
+
+    real = batch.qid >= 0
+    stats.filter_false += int(((verdict == FALSE) & real).sum())
+    stats.filter_true += int(((verdict == TRUE) & real).sum())
+    for j in np.flatnonzero((verdict == TRUE) & real):
+        answers[batch.qid[j]] = True
+
+    pending = np.flatnonzero((verdict == UNKNOWN) & real)
+    # jobs whose query is already TRUE need no exact work
+    pending = np.asarray([j for j in pending if not answers[batch.qid[j]]],
+                         dtype=np.int64)
+    if filters_only:
+        # treat UNKNOWN as reachable (upper bound) -- used to measure the
+        # cascade's pruning power in benchmarks
+        for j in pending:
+            answers[batch.qid[j]] = True
+        return answers
+    stats.exact_jobs += len(pending)
+    if len(pending) == 0:
+        return answers
+
+    edge_src = jnp.asarray(g.src)
+    edge_dst = jnp.asarray(g.indices)
+    elab = np.asarray(g.labels)
+    n_states = 1 << max_m
+    max_rounds = g.n_vertices * n_states + 1
+
+    for c0 in range(0, len(pending), exact_chunk):
+        jobs = pending[c0:c0 + exact_chunk]
+        real_n = len(jobs)
+        if real_n < exact_chunk:   # pad to a stable jit shape
+            jobs = np.concatenate(
+                [jobs, np.full(exact_chunk - real_n, jobs[0], np.int64)])
+        q_n = len(jobs)
+        ok = ~batch.forb_raw[jobs][:, elab]                 # [q, E]
+        sbit = np.zeros((q_n, g.n_edges), dtype=np.int32)
+        full = np.zeros(q_n, dtype=np.int32)
+        for row, j in enumerate(jobs):
+            req = [l for l in batch.req_labels[j] if l >= 0]
+            full[row] = (1 << len(req)) - 1
+            for s, l in enumerate(req):
+                sbit[row][elab == l] = 1 << s
+        # Bloom corridor: x ∈ V_out(u) ∩ V_in(v)
+        uu, vv = batch.u[jobs], batch.v[jobs]
+        cor = np.array(
+            bitset.words_contain(index.n_out[uu][:, None, :],
+                                 vtx_packed[None, :, :]) &
+            bitset.words_contain(index.n_in[vv][:, None, :],
+                                 vtx_packed[None, :, :]))
+        cor[np.arange(q_n), vv] = True
+        cor[np.arange(q_n), uu] = True
+        reached, rounds = _exact_expand(
+            jnp.asarray(uu), jnp.asarray(vv), jnp.asarray(ok),
+            jnp.asarray(sbit), jnp.asarray(full), jnp.asarray(cor),
+            edge_src, edge_dst, v_n=g.n_vertices, n_states=n_states,
+            max_rounds=max_rounds)
+        stats.exact_rounds += int(rounds)
+        for row, j in enumerate(jobs[:real_n]):
+            if bool(reached[row]):
+                answers[batch.qid[j]] = True
+    return answers
+
+
+def answer(index: TDRIndex, u: int, v: int, p: pat.Pattern, **kw) -> bool:
+    return bool(answer_batch(index, [(u, v, p)], **kw)[0])

@@ -1,0 +1,2 @@
+from . import pipeline
+from .pipeline import DataConfig, batch_for_step

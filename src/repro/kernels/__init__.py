@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the TDR engine hot spots.
+
+Each kernel module carries the ``pl.pallas_call`` + BlockSpec tiling;
+``ops.py`` is the public jit'd surface (with interpret/ref fallbacks for
+CPU) and ``ref.py`` the pure-jnp oracles the tests allclose against.
+"""
+from . import ops, ref
+from .bitset_matmul import bitset_matmul
+from .pattern_filter import way_filter
+from .popcount import popcount_rows
+
+__all__ = ["ops", "ref", "bitset_matmul", "way_filter", "popcount_rows"]

@@ -1,0 +1,102 @@
+"""Boolean-OR-semiring bit-matmul Pallas kernel.
+
+This is the compute hot-spot of the TPU-adapted TDR engine: one fixpoint
+round of the closure build and one round of product-graph frontier expansion
+are both
+
+    out[i, w] = OR_j ( A[i, j]  AND  X[j, w] )
+
+with ``A`` a packed adjacency bit-matrix (bit j of row i = edge i→j) and
+``X`` packed reachability bitsets (32 graph columns per uint32 lane).  The
+kernel runs on the VPU: each (TI, TW) tile accumulates TK selected-row ORs,
+i.e. TI·TK·TW word-ops per tile at 32 useful graph-bits per op — the
+arithmetic shape of a matmul without an MXU contraction (OR is not ⊕ the
+MXU supports).  ``repro.kernels.ops`` also exposes an MXU variant that
+unpacks to bf16 and thresholds a real matmul — §Perf in EXPERIMENTS.md
+compares the two rooflines.
+
+Tiling: grid (M/TI, W/TW, K/TK); K is the innermost ("arbitrary") axis so
+the output tile stays resident in VMEM while adjacency/frontier tiles
+stream through.  VMEM per step = TI·TK/32·4 + TK·TW·4 + TI·TW·4 bytes
+(defaults 128·128·4 ≈ 64 KiB + 2 KiB) — far under the ~16 MiB v5e VMEM,
+leaving room for double-buffered pipelining.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD = 32
+
+
+def _kernel(a_ref, x_ref, o_ref, *, tk: int):
+    """One grid step: o[TI,TW] |= OR_j in TK (a_bit[i,j] & x[j,:])."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_words = a_ref[...]                       # [TI, TK//32] uint32
+    x = x_ref[...]                             # [TK, TW]     uint32
+    ti = a_words.shape[0]
+    # unpack adjacency words -> bool [TI, TK]
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (a_words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    bits = bits.reshape(ti, tk) > 0
+
+    def body(j, acc):
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)      # [1, TW]
+        sel = jax.lax.dynamic_slice_in_dim(bits, j, 1, axis=1)  # [TI, 1]
+        return acc | jnp.where(sel, xj, jnp.uint32(0))
+
+    acc = jax.lax.fori_loop(0, tk, body, jnp.zeros_like(o_ref[...]))
+    o_ref[...] |= acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ti", "tk", "tw", "interpret"))
+def bitset_matmul(a_packed: jax.Array, x: jax.Array, *, ti: int = 128,
+                  tk: int = 128, tw: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """``OR_j (A[i,j] & X[j,:])`` over packed uint32 operands.
+
+    Args:
+      a_packed: uint32 [M, K//32] adjacency bit-rows.
+      x:        uint32 [K, W] packed bitsets.
+    Returns:
+      uint32 [M, W].
+    """
+    m, kw = a_packed.shape
+    k, w = x.shape
+    assert kw * WORD == k, (a_packed.shape, x.shape)
+    ti = min(ti, m) or 1
+    tk = min(tk, k) or WORD
+    tk = max(WORD, (tk // WORD) * WORD)
+    tw = min(tw, w) or 1
+
+    m_pad = -(-m // ti) * ti
+    k_pad = -(-k // tk) * tk
+    w_pad = -(-w // tw) * tw
+    a_p = jnp.pad(a_packed, ((0, m_pad - m), (0, (k_pad - k) // WORD)))
+    x_p = jnp.pad(x, ((0, k_pad - k), (0, w_pad - w)))
+
+    grid = (m_pad // ti, w_pad // tw, k_pad // tk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, tk=tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, tk // WORD), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tw), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((ti, tw), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, w_pad), jnp.uint32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_p, x_p)
+    return out[:m, :w]

@@ -1,0 +1,94 @@
+"""Public jit'd wrappers for the TDR kernels.
+
+On TPU these lower to the Pallas kernels; on CPU (this container) they run
+the kernels in ``interpret=True`` mode, or — for the big batched call sites
+where interpret-mode Python execution would dominate — the pure-jnp oracle,
+which is numerically identical.  Selection is explicit so tests can force
+either path.
+
+``frontier_step_mxu`` is the beyond-paper MXU lowering of the same semiring
+step (unpack → bf16 matmul → threshold → repack): §Perf in EXPERIMENTS.md
+compares its roofline against the VPU kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from . import ref
+from .bitset_matmul import bitset_matmul
+from .pattern_filter import way_filter
+from .popcount import popcount_rows
+
+WORD = 32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def frontier_step(a_packed: jax.Array, x: jax.Array, *,
+                  mode: str = "auto") -> jax.Array:
+    """One boolean-semiring expansion round: OR_j (A[i,j] & X[j,:]).
+
+    mode: "auto" | "pallas" | "interpret" | "ref" | "mxu"
+    """
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "pallas":
+        return bitset_matmul(a_packed, x)
+    if mode == "interpret":
+        return bitset_matmul(a_packed, x, interpret=True)
+    if mode == "mxu":
+        return frontier_step_mxu(a_packed, x)
+    if mode == "ref":
+        return ref.bitset_matmul_ref(a_packed, x)
+    raise ValueError(mode)
+
+
+@jax.jit
+def frontier_step_mxu(a_packed: jax.Array, x: jax.Array) -> jax.Array:
+    """MXU lowering: unpack to bf16, real matmul, threshold, repack.
+
+    32× the bytes of the packed VPU path but contraction runs at MXU rate;
+    wins when K (graph block) is reused across many frontier columns.
+    """
+    m, kw = a_packed.shape
+    k, w = x.shape
+    a_bool = bitset.unpack_bits(a_packed, k).astype(jnp.bfloat16)
+    x_bits = bitset.unpack_bits(x, w * WORD).astype(jnp.bfloat16)
+    y = jax.lax.dot_general(a_bool, x_bits, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return bitset.pack_bits(y > 0)
+
+
+def filter_ways(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb, null_plane,
+                *, mode: str = "auto") -> jax.Array:
+    """Fused per-(job, way) viability predicate -> bool [J, G]."""
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "pallas":
+        return way_filter(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb,
+                          null_plane)
+    if mode == "interpret":
+        return way_filter(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb,
+                          null_plane, interpret=True)
+    if mode == "ref":
+        return ref.way_filter_ref(h_vtx, h_lab, v_vtx, v_lab, vbits, req,
+                                  forb, null_plane)
+    raise ValueError(mode)
+
+
+def popcount(words: jax.Array, *, mode: str = "auto") -> jax.Array:
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "pallas":
+        return popcount_rows(words)
+    if mode == "interpret":
+        return popcount_rows(words, interpret=True)
+    if mode == "ref":
+        return ref.popcount_rows_ref(words)
+    raise ValueError(mode)

@@ -1,0 +1,95 @@
+"""Fused phase-1 filter-cascade Pallas kernel.
+
+Evaluates the per-(job, way) group-pruning predicate of ``tdr_query`` in a
+single VPU pass over packed words — the query-side hot loop when millions of
+PCR queries are screened per second:
+
+    way_ok[j,g] =   (vbits[j] ⊆ H_vtx[j,g])            # target containment
+                  ∧ (req[j]   ⊆ H_lab[j,g])            # required labels
+                  ∧ ¬ ∃ℓ<k: blocked(j,g,ℓ) ∧ ¬reached_before(j,g,ℓ)
+
+    blocked(j,g,ℓ)  = (V_lab[j,g,ℓ] ∧ ¬forb[j] ∧ ¬NULL) = ∅
+    reached(j,g,ℓ)  =  vbits[j] ⊆ V_vtx[j,g,ℓ]
+
+Inputs arrive pre-gathered per job (the ``u``-row gather is a plain XLA op
+outside the kernel), so every ref is contiguous and the kernel is a pure
+streaming elementwise+reduce pass: bytes dominate, arithmetic intensity
+≈ 1 op/byte — firmly memory-bound, which is why fusing the whole cascade
+into one pass (instead of 5 separate XLA reductions) is the win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hv_ref, hl_ref, vv_ref, vl_ref, vbits_ref, req_ref, forb_ref,
+            null_ref, o_ref, *, k: int):
+    hv = hv_ref[...]        # [TJ, G, Wv]
+    hl = hl_ref[...]        # [TJ, G, Wl]
+    vv = vv_ref[...]        # [TJ, G, k, Wv]
+    vl = vl_ref[...]        # [TJ, G, k, Wl]
+    vbits = vbits_ref[...]  # [TJ, Wv]
+    req = req_ref[...]      # [TJ, Wl]
+    forb = forb_ref[...]    # [TJ, Wl]
+    null = null_ref[...]    # [1, Wl]
+
+    has_tgt = jnp.all((hv & vbits[:, None, :]) == vbits[:, None, :], axis=-1)
+    has_req = jnp.all((hl & req[:, None, :]) == req[:, None, :], axis=-1)
+
+    real = vl & ~forb[:, None, None, :] & ~null[None, None, :, :]
+    blocked = jnp.all(real == 0, axis=-1)                        # [TJ,G,k]
+    reached = jnp.all((vv & vbits[:, None, None, :])
+                      == vbits[:, None, None, :], axis=-1)       # [TJ,G,k]
+    reached_upto = jnp.cumsum(reached.astype(jnp.int32), axis=-1) > 0
+    not_before = jnp.concatenate(
+        [jnp.ones_like(reached_upto[..., :1]), ~reached_upto[..., :-1]],
+        axis=-1)
+    refuted = jnp.any(blocked & not_before, axis=-1)             # [TJ, G]
+
+    o_ref[...] = (has_tgt & has_req & ~refuted)
+
+
+@functools.partial(jax.jit, static_argnames=("tj", "interpret"))
+def way_filter(h_vtx: jax.Array, h_lab: jax.Array, v_vtx: jax.Array,
+               v_lab: jax.Array, vbits: jax.Array, req: jax.Array,
+               forb: jax.Array, null_plane: jax.Array, *, tj: int = 256,
+               interpret: bool = False) -> jax.Array:
+    """Fused way-viability predicate -> bool [J, G].
+
+    All inputs packed uint32, already gathered per job:
+      h_vtx [J,G,Wv] h_lab [J,G,Wl] v_vtx [J,G,k,Wv] v_lab [J,G,k,Wl]
+      vbits [J,Wv] req/forb [J,Wl] null_plane [Wl]
+    """
+    j, g, wv = h_vtx.shape
+    k = v_vtx.shape[2]
+    wl = h_lab.shape[-1]
+    tj = max(1, min(tj, j))
+    j_pad = -(-j // tj) * tj
+
+    def padj(x):
+        return jnp.pad(x, ((0, j_pad - j),) + ((0, 0),) * (x.ndim - 1))
+
+    grid = (j_pad // tj,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tj, g, wv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tj, g, wl), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tj, g, k, wv), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tj, g, k, wl), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tj, wv), lambda i: (i, 0)),
+            pl.BlockSpec((tj, wl), lambda i: (i, 0)),
+            pl.BlockSpec((tj, wl), lambda i: (i, 0)),
+            pl.BlockSpec((1, wl), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tj, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((j_pad, g), jnp.bool_),
+        interpret=interpret,
+    )(padj(h_vtx), padj(h_lab), padj(v_vtx), padj(v_lab), padj(vbits),
+      padj(req), padj(forb), null_plane[None, :])
+    return out[:j]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+
+WORD = 32
+
+
+def bitset_matmul_ref(a_packed: jax.Array, x: jax.Array) -> jax.Array:
+    """OR_j (A[i,j] & X[j,:]) — dense oracle via unpack + int matmul."""
+    m, kw = a_packed.shape
+    k, w = x.shape
+    a_bool = bitset.unpack_bits(a_packed, k)                # [M, K]
+    x_bits = bitset.unpack_bits(x, w * WORD)                # [K, W*32]
+    prod = jnp.dot(a_bool.astype(jnp.int32), x_bits.astype(jnp.int32)) > 0
+    return bitset.pack_bits(prod)                           # [M, W]
+
+
+def way_filter_ref(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb, null_plane):
+    """Reference way-viability predicate (mirrors tdr_query phase 1)."""
+    has_tgt = bitset.words_contain(h_vtx, vbits[:, None, :])
+    has_req = bitset.words_contain(h_lab, req[:, None, :])
+    real = v_lab & ~forb[:, None, None, :] & ~null_plane[None, None, None, :]
+    blocked = jnp.all(real == 0, axis=-1)
+    reached = bitset.words_contain(v_vtx, vbits[:, None, None, :])
+    reached_upto = jnp.cumsum(reached.astype(jnp.int32), axis=-1) > 0
+    not_before = jnp.concatenate(
+        [jnp.ones_like(reached_upto[..., :1]), ~reached_upto[..., :-1]],
+        axis=-1)
+    refuted = jnp.any(blocked & not_before, axis=-1)
+    return has_tgt & has_req & ~refuted
+
+
+def popcount_rows_ref(words: jax.Array) -> jax.Array:
+    return bitset.popcount(words)

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 fake host devices.  (Everything
+else in the repo — tests, benches, examples — sees the real single CPU.)
+
+Per cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. assembles sharded ShapeDtypeStruct inputs via ``input_specs()``
+     (no allocation anywhere),
+  3. lowers + compiles the step function (train_step for train_4k,
+     prefill for prefill_32k, serve_step for decode shapes),
+  4. records ``memory_analysis()`` (fits-per-chip proof),
+     loop-aware HLO costs (utils/hlo.py) and the three roofline terms,
+  5. dumps everything to JSON for EXPERIMENTS.md.
+
+Also lowers the paper's own engine (``--arch tdr-graph``): the distributed
+TDR closure fixpoint on the full mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi --out experiments/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPES, InputShape, ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding
+from repro.models import model as model_lib
+from repro.models import init_params, pspec
+from repro.train import AdamWConfig, make_train_step
+from repro.train.serve_step import make_serve_step
+from repro.train.train_step import init_train_state
+from repro.utils import hlo as hlo_lib
+from repro.utils import roofline as roof_lib
+
+# per-arch microbatch counts for train_4k (memory lever; tuned so the
+# per-chip footprint clears 16 GB — see EXPERIMENTS.md §Dry-run)
+# NOTE: microbatch rows (global_batch / n_micro) must stay divisible by
+# the batch-axis size (16 single-pod, 32 multi-pod) or activations lose
+# their data sharding and replicate -- measured as a 2.5x collective blow-up
+# on deepseek (EXPERIMENTS.md §Perf, iteration D1).
+TRAIN_MICROBATCHES = {
+    "gemma3-27b": 8, "dbrx-132b": 8, "deepseek-v2-236b": 8,
+    "phi3-medium-14b": 8, "stablelm-12b": 8, "phi3-mini-3.8b": 8,
+    "phi-3-vision-4.2b": 8, "musicgen-large": 8, "zamba2-1.2b": 8,
+    "rwkv6-3b": 4,
+}
+
+# bf16 Adam moments for the 100B+ models (standard at this scale; the
+# master weights stay f32) -- EXPERIMENTS.md §Dry-run documents the choice
+BF16_MOMENT_ARCHS = {"dbrx-132b", "deepseek-v2-236b"}
+
+
+def _eval_shape_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def input_specs(arch: str, shape_name: str, the_mesh) -> dict:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, sharded, no alloc)
+    for every input of the cell's step function."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    dt = jnp.dtype(cfg.dtype)
+    b_ax = mesh_lib.batch_axes(the_mesh)
+    ns = lambda spec: NamedSharding(the_mesh, spec)
+
+    tokens_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32,
+        sharding=ns(P(b_ax, None)))
+    out = {"tokens": tokens_sds}
+    if cfg.n_media_tokens:
+        out["media"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_media_tokens, cfg.d_model), dt,
+            sharding=ns(P(b_ax, None, None)))
+
+    params_shape = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    p_specs = sharding.sanitize_specs(
+        sharding.param_specs(cfg, params_shape, the_mesh), params_shape,
+        the_mesh)
+    out["params"] = sharding.sds_with_sharding(
+        params_shape, sharding.to_named(p_specs, the_mesh))
+
+    if shape.kind == "train":
+        opt_cfg0 = AdamWConfig(
+            moment_dtype="bfloat16" if arch in BF16_MOMENT_ARCHS
+            else "float32")
+        state_shape = jax.eval_shape(
+            lambda k: init_train_state(cfg, init_params(cfg, k), opt_cfg0),
+            jax.random.PRNGKey(0))
+        s_specs = sharding.sanitize_specs(
+            sharding.state_specs(cfg, state_shape, the_mesh), state_shape,
+            the_mesh)
+        out["state"] = sharding.sds_with_sharding(
+            state_shape, sharding.to_named(s_specs, the_mesh))
+    if shape.kind == "decode":
+        cache_shape = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len))
+        c_specs = sharding.sanitize_specs(
+            sharding.cache_specs(cfg, cache_shape, the_mesh,
+                                 shape.global_batch), cache_shape, the_mesh)
+        out["cache"] = sharding.sds_with_sharding(
+            cache_shape, sharding.to_named(c_specs, the_mesh))
+        out["step_tokens"] = jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32,
+            sharding=ns(P(b_ax if shape.global_batch > 1 else None)))
+    return out
+
+
+def applicable(arch: str, shape_name: str) -> bool:
+    cfg = configs.get(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False  # full-attention archs skip (see DESIGN.md §5)
+    return True
+
+
+def lower_cell(arch: str, shape_name: str, the_mesh, *,
+               rwkv_chunked: bool = False, extra: Optional[dict] = None):
+    """Returns (lowered, n_tokens, model_flops)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name, the_mesh)
+    extra = extra or {}
+
+    if shape.kind == "train":
+        n_micro = extra.get("n_microbatches",
+                            TRAIN_MICROBATCHES.get(arch, 4))
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if arch in BF16_MOMENT_ARCHS
+            else "float32")
+        step = make_train_step(cfg, opt_cfg,
+                               n_microbatches=n_micro, remat=True,
+                               remat_policy=extra.get("remat_policy", ""),
+                               rwkv_chunked=rwkv_chunked)
+        batch = {"tokens": specs["tokens"]}
+        if "media" in specs:
+            batch["media"] = specs["media"]
+        fn = jax.jit(step, donate_argnums=0)
+        with pspec.use_mesh(the_mesh, pspec.default_mapping(
+                "pod" in the_mesh.axis_names)), the_mesh:
+            lowered = fn.lower(specs["state"], batch)
+        n_tokens = shape.global_batch * shape.seq_len
+        mf = roof_lib.model_flops_train(cfg.n_active_params(), n_tokens)
+    elif shape.kind == "prefill":
+        def prefill_fn(params, tokens, media=None):
+            return model_lib.prefill(cfg, params, tokens, media,
+                                     max_len=shape.seq_len)
+        args = [specs["params"], specs["tokens"]]
+        if "media" in specs:
+            args.append(specs["media"])
+        fn = jax.jit(prefill_fn)
+        with pspec.use_mesh(the_mesh, pspec.default_mapping(
+                "pod" in the_mesh.axis_names)), the_mesh:
+            lowered = fn.lower(*args)
+        n_tokens = shape.global_batch * shape.seq_len
+        mf = roof_lib.model_flops_forward(cfg.n_active_params(), n_tokens)
+    else:  # decode
+        serve = make_serve_step(cfg)
+
+        def decode_fn(params, cache, tokens):
+            nxt, logits, cache = serve(params, cache, tokens)
+            return nxt, cache
+
+        fn = jax.jit(decode_fn, donate_argnums=1)
+        with pspec.use_mesh(the_mesh, pspec.default_mapping(
+                "pod" in the_mesh.axis_names)), the_mesh:
+            lowered = fn.lower(specs["params"], specs["cache"],
+                               specs["step_tokens"])
+        n_tokens = shape.global_batch  # one token per sequence
+        mf = roof_lib.model_flops_forward(cfg.n_active_params(), n_tokens)
+    return lowered, n_tokens, mf
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             analyze: bool = True, extra: Optional[dict] = None,
+             hlo_dir: Optional[str] = None) -> dict:
+    t0 = time.time()
+    the_mesh = mesh_lib.make_production_mesh(
+        multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(the_mesh.shape.values())))
+    lowered, n_tokens, model_flops = lower_cell(
+        arch, shape_name, the_mesh,
+        rwkv_chunked=(extra or {}).get("rwkv_chunked", False), extra=extra)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+            "peak_gb": (mem.argument_size_in_bytes
+                        + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        - mem.alias_size_in_bytes) / 1e9,
+        },
+        "xla_cost": {k: v for k, v in compiled.cost_analysis().items()
+                     if k in ("flops", "bytes accessed")},
+    }
+    if analyze:
+        text = compiled.as_text()
+        if hlo_dir:
+            import gzip
+            os.makedirs(hlo_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    hlo_dir, f"{arch}__{shape_name}__{mesh_kind}.txt.gz"),
+                    "wt") as f:
+                f.write(text)
+        cost = hlo_lib.analyze(text)
+        roof = roof_lib.Roofline.from_cost(cost, chips=chips,
+                                           model_flops=model_flops)
+        rec["hlo"] = {
+            "flops_per_chip": cost.flops,
+            "hbm_bytes_per_chip": cost.hbm_bytes,
+            "collective_bytes_per_chip": cost.collective_bytes,
+            "collectives": dict(cost.collectives),
+            "collective_counts": dict(cost.collective_counts),
+            "top_collectives": cost.top_collectives[:8],
+            "top_memory": cost.top_memory[:8],
+        }
+        rec["roofline"] = roof.as_dict()
+    return rec
+
+
+def run_tdr_cell(mesh_kind: str) -> dict:
+    """Dry-run the paper's engine: distributed closure on the full mesh."""
+    from repro.core import distributed
+    t0 = time.time()
+    the_mesh = mesh_lib.make_production_mesh(
+        multi_pod=(mesh_kind == "multi"))
+    gcfg = configs.TDR_GRAPH
+    n_shards = the_mesh.devices.size
+    e_max = -(-gcfg.n_edges // n_shards)
+    lowered = distributed.lower_distributed_closure(
+        the_mesh, gcfg.n_vertices, e_max, gcfg.vtx_bits, gcfg.rounds)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = hlo_lib.analyze(compiled.as_text())
+    chips = int(n_shards)
+    roof = roof_lib.Roofline.from_cost(
+        cost, chips=chips,
+        # "model flops" for the engine: one OR-op per (edge × word) per
+        # round, expressed in flop-equivalents
+        model_flops=float(gcfg.n_edges) * (gcfg.vtx_bits // 32)
+        * gcfg.rounds)
+    return {
+        "arch": "tdr-graph", "shape": f"V{gcfg.n_vertices}", "mesh":
+        mesh_kind, "chips": chips,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {"temp_gb": mem.temp_size_in_bytes / 1e9,
+                   "argument_gb": mem.argument_size_in_bytes / 1e9},
+        "hlo": {"flops_per_chip": cost.flops,
+                "hbm_bytes_per_chip": cost.hbm_bytes,
+                "collective_bytes_per_chip": cost.collective_bytes,
+                "collectives": dict(cost.collectives)},
+        "roofline": roof.as_dict(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--hlo-dir", default="")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if args.arch == "all" \
+        else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    results, failures = [], []
+    for mesh_kind in meshes:
+        for arch in archs:
+            if arch == "tdr-graph":
+                results.append(run_tdr_cell(mesh_kind))
+                continue
+            for shape_name in shapes:
+                if not applicable(arch, shape_name):
+                    results.append({"arch": arch, "shape": shape_name,
+                                    "mesh": mesh_kind, "skipped":
+                                    "long_500k: full-attention arch"})
+                    continue
+                tag = f"{arch} × {shape_name} × {mesh_kind}"
+                try:
+                    rec = run_cell(arch, shape_name, mesh_kind,
+                                   hlo_dir=args.hlo_dir or None)
+                    r = rec.get("roofline", {})
+                    print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                          f"peak={rec['memory']['peak_gb']:.2f}GB/chip "
+                          f"dom={r.get('dominant')} "
+                          f"mfu={r.get('mfu', 0):.3f}", flush=True)
+                    results.append(rec)
+                except Exception as e:  # noqa
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    failures.append({"cell": tag,
+                                     "error": traceback.format_exc()})
+                    if not args.continue_on_error:
+                        raise
+        if "tdr-graph" not in archs and args.arch == "all":
+            results.append(run_tdr_cell(mesh_kind))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"wrote {args.out}: {len(results)} cells, "
+          f"{len(failures)} failures")
+
+
+if __name__ == "__main__":
+    main()

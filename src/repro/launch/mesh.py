@@ -1,0 +1,37 @@
+"""Production mesh factory.
+
+Defined as a function (never a module-level constant) so importing this
+module never touches jax device state.  The dry-run forces 512 host-platform
+devices *before* importing jax; tests and benches see the real single CPU
+device and build their own tiny meshes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+def fsdp_axis(mesh) -> str:
+    return "data"

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: run one named iteration on one of the three
+chosen cells, record the roofline before/after into
+experiments/perf_iterations.json.
+
+Iterations (see EXPERIMENTS.md §Perf for the hypothesis log):
+  rwkv-chunked     rwkv6-3b × train_4k with the chunked WKV6 formulation
+  rwkv-chunk-mxu   + bf16 intra-chunk matmuls
+  ds-micro8        deepseek-v2 × train_4k with shardable microbatches
+  ds-policy        + checkpoint policy saving expert matmuls
+  tdr-2d           tdr-graph closure with 2-D (vertex × word) partitioning
+
+Usage: PYTHONPATH=src python -m repro.launch.perf --iter rwkv-chunked
+"""
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.launch import mesh as mesh_lib
+from repro.launch.dryrun import run_cell
+from repro.utils import hlo as hlo_lib
+from repro.utils import roofline as roof_lib
+
+OUT = "experiments/perf_iterations.json"
+
+
+def record(name: str, rec: dict) -> None:
+    data = {"iterations": {}}
+    if os.path.exists(OUT):
+        data = json.load(open(OUT))
+    data["iterations"][name] = rec
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    json.dump(data, open(OUT, "w"), indent=1)
+    ro = rec.get("roofline", {})
+    print(f"[perf] {name}: compute={ro.get('compute_s', 0):.3f}s "
+          f"memory={ro.get('memory_s', 0):.3f}s "
+          f"collective={ro.get('collective_s', 0):.3f}s "
+          f"dom={ro.get('dominant')} mfu={ro.get('mfu', 0):.4f}")
+
+
+def run_tdr_variant(two_d: bool, word_shards: int = 8) -> dict:
+    from repro.core import distributed
+    the_mesh = mesh_lib.make_production_mesh()
+    gcfg = configs.TDR_GRAPH
+    n_dev = the_mesh.devices.size
+    if two_d:
+        v_shards = n_dev // word_shards
+        e_max = -(-gcfg.n_edges // v_shards)
+        lowered = distributed.lower_distributed_closure_2d(
+            the_mesh, gcfg.n_vertices, e_max, gcfg.vtx_bits, gcfg.rounds,
+            word_shards=word_shards)
+    else:
+        e_max = -(-gcfg.n_edges // n_dev)
+        lowered = distributed.lower_distributed_closure(
+            the_mesh, gcfg.n_vertices, e_max, gcfg.vtx_bits, gcfg.rounds)
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    cost = hlo_lib.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    roof = roof_lib.Roofline.from_cost(
+        cost, chips=n_dev,
+        model_flops=float(gcfg.n_edges) * (gcfg.vtx_bits // 32)
+        * gcfg.rounds)
+    return {
+        "cell": "tdr-graph", "variant": "2d" if two_d else "1d",
+        "compile_s": round(dt, 2),
+        "memory": {"temp_gb": mem.temp_size_in_bytes / 1e9,
+                   "argument_gb": mem.argument_size_in_bytes / 1e9},
+        "hlo": {"flops_per_chip": cost.flops,
+                "hbm_bytes_per_chip": cost.hbm_bytes,
+                "collective_bytes_per_chip": cost.collective_bytes,
+                "collectives": dict(cost.collectives)},
+        "roofline": roof.as_dict(),
+    }
+
+
+def run_rwkv_dp() -> dict:
+    """§Perf iteration R4: rwkv6 train as 256-way pure DP + ZeRO-1.
+
+    RWKV6's 40 heads don't divide the 16-wide model axis, so TP never
+    sharded its state ops anyway — it only added per-layer all-reduces.
+    Re-map: batch over (data×model) = 256-way DP, params replicated
+    (bf16, 6.2 GB/chip), optimizer state ZeRO-1-sharded over all 256
+    chips.  Predicted: TP all-reduces vanish, per-chip activation traffic
+    ÷16; gradient all-reduce (2×12 GB f32) becomes the collective term.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import sharding as shlib
+    from repro.models import init_params as initp, pspec
+    from repro.train import make_train_step
+    from repro.train.train_step import init_train_state
+    from repro.train import AdamWConfig
+    from repro.configs.base import SHAPES
+
+    arch, shape_name = "rwkv6-3b", "train_4k"
+    cfg = configs.get(arch)
+    sh = SHAPES[shape_name]
+    the_mesh = mesh_lib.make_production_mesh()
+    dm = ("data", "model")
+    n_ways = 256
+
+    def zero1_spec(leaf) -> "P":
+        dims = list(leaf.shape)
+        for i, d in enumerate(dims):
+            if d % n_ways == 0:
+                spec = [None] * len(dims)
+                spec[i] = dm
+                return P(*spec)
+        return P(*([None] * len(dims)))
+
+    state_shape = jax.eval_shape(
+        lambda k: init_train_state(cfg, initp(cfg, k)),
+        jax.random.PRNGKey(0))
+    p_repl = jax.tree.map(lambda l: P(*([None] * l.ndim)),
+                          state_shape["params"])
+    opt_master = jax.tree.map(zero1_spec, state_shape["opt"]["master"])
+    s_specs = {"params": p_repl,
+               "opt": {"master": opt_master, "m": opt_master,
+                       "v": opt_master, "count": P()}}
+    sds = shlib.sds_with_sharding(state_shape,
+                                  shlib.to_named(s_specs, the_mesh))
+    toks = jax.ShapeDtypeStruct(
+        (sh.global_batch, sh.seq_len), jnp.int32,
+        sharding=NamedSharding(the_mesh, P(dm, None)))
+    # n_microbatches=1: with 256-way DP every microbatch must keep >=256
+    # rows (the D0/D1 lesson, applied)
+    step = make_train_step(cfg, AdamWConfig(), n_microbatches=1,
+                           remat=True, rwkv_chunked=True)
+    mapping = {"batch": dm, "heads": None, "kv": None, "vocab": None,
+               "ff": None, "experts": None, "embed": None, "seq": None}
+    t0 = time.time()
+    with pspec.use_mesh(the_mesh, mapping), the_mesh:
+        lowered = jax.jit(step, donate_argnums=0).lower(
+            sds, {"tokens": toks})
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = hlo_lib.analyze(compiled.as_text())
+    mf = roof_lib.model_flops_train(
+        cfg.n_active_params(), sh.global_batch * sh.seq_len)
+    roofl = roof_lib.Roofline.from_cost(cost, chips=256, model_flops=mf)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": "single", "chips": 256,
+        "variant": "dp256-zero1", "compile_s": round(dt, 2),
+        "memory": {"peak_gb": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes) / 1e9,
+                   "temp_gb": mem.temp_size_in_bytes / 1e9,
+                   "argument_gb": mem.argument_size_in_bytes / 1e9},
+        "hlo": {"flops_per_chip": cost.flops,
+                "hbm_bytes_per_chip": cost.hbm_bytes,
+                "collective_bytes_per_chip": cost.collective_bytes,
+                "collectives": dict(cost.collectives),
+                "top_collectives": cost.top_collectives[:8],
+                "top_memory": cost.top_memory[:8]},
+        "roofline": roofl.as_dict(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iter", required=True)
+    args = ap.parse_args()
+    it = args.iter
+
+    if it == "rwkv-chunked":
+        rec = run_cell("rwkv6-3b", "train_4k", "single",
+                       extra={"rwkv_chunked": True})
+    elif it == "ds-micro8":
+        rec = run_cell("deepseek-v2-236b", "train_4k", "single",
+                       extra={"n_microbatches": 8})
+    elif it == "ds-micro16":
+        rec = run_cell("deepseek-v2-236b", "train_4k", "single",
+                       extra={"n_microbatches": 16})
+    elif it == "ds-policy":
+        rec = run_cell("deepseek-v2-236b", "train_4k", "single",
+                       extra={"n_microbatches": 8, "remat_policy": "dots"})
+    elif it == "gemma3-decode-window":
+        rec = run_cell("gemma3-27b", "decode_32k", "single")
+    elif it == "tdr-1d":
+        rec = run_tdr_variant(False)
+    elif it == "tdr-2d":
+        rec = run_tdr_variant(True)
+    elif it == "tdr-2d-w4":
+        rec = run_tdr_variant(True, word_shards=4)
+    elif it == "rwkv-dp":
+        rec = run_rwkv_dp()
+    else:
+        raise SystemExit(f"unknown iteration {it}")
+    record(it, rec)
+
+
+if __name__ == "__main__":
+    main()

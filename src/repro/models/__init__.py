@@ -1,0 +1,7 @@
+"""LM substrate: model families for the assigned architecture pool."""
+from . import attention, layers, model, moe, ssm, transformer
+from .model import decode_step, init_cache, prefill
+from .transformer import forward, init_params
+
+__all__ = ["attention", "layers", "model", "moe", "ssm", "transformer",
+           "forward", "init_params", "decode_step", "init_cache", "prefill"]

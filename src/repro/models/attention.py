@@ -1,0 +1,249 @@
+"""Attention variants: GQA (full / sliding-window) and MLA (DeepSeek-V2).
+
+All paths are exact; prefill uses query-block chunking so the score matrix
+never materialises at [S, S] (required for the 32k dry-run cells to fit), and
+decode attends a single query row against the cache.  Masks are computed from
+iota comparisons inline — nothing quadratic is ever stored.
+
+MLA keeps the paper's latent formulation: the KV cache stores the compressed
+``c_kv`` (kv_lora_rank) plus the shared rotary key (qk_rope_dim) — 576 floats
+per token per layer for deepseek-v2-236b instead of 2·128·192.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, pspec
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- params
+def init_gqa(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "wq": layers.truncated_normal(ks[0], (d, h * hd), std, dtype),
+        "wk": layers.truncated_normal(ks[1], (d, kv * hd), std, dtype),
+        "wv": layers.truncated_normal(ks[2], (d, kv * hd), std, dtype),
+        "wo": layers.truncated_normal(ks[3], (h * hd, d),
+                                      (h * hd) ** -0.5, dtype),
+    }
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    return {
+        "wq_a": layers.truncated_normal(ks[0], (d, cfg.q_lora_rank), std,
+                                        dtype),
+        "q_norm": layers.init_rms_norm(cfg.q_lora_rank, dtype),
+        "wq_b": layers.truncated_normal(ks[1], (cfg.q_lora_rank, h * qk),
+                                        cfg.q_lora_rank ** -0.5, dtype),
+        "wkv_a": layers.truncated_normal(
+            ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), std, dtype),
+        "kv_norm": layers.init_rms_norm(cfg.kv_lora_rank, dtype),
+        "wkv_b": layers.truncated_normal(
+            ks[3], (cfg.kv_lora_rank,
+                    h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            cfg.kv_lora_rank ** -0.5, dtype),
+        "wo": layers.truncated_normal(ks[4], (h * cfg.v_head_dim, d),
+                                      (h * cfg.v_head_dim) ** -0.5, dtype),
+    }
+
+
+# ------------------------------------------------------------- mask logic
+def _score_mask(q_pos, k_pos, window: int, use_window):
+    """Causal (+ optional sliding window) mask from position vectors.
+
+    ``window`` is static (the layer's window size, 0 = full attention);
+    ``use_window`` may be a *traced* scalar bool so gemma3's 5:1
+    local:global striping can ride through one scanned layer body.
+    """
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window == 0:
+        return causal
+    in_window = (q_pos[:, None] - k_pos[None, :]) < window
+    return causal & (in_window | jnp.logical_not(use_window))
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window, scale, use_window=True):
+    """softmax(q k^T / sqrt) v with mask; q [B,Sq,H,hd] k/v [B,Sk,KV,hd].
+
+    Operands stay in the model dtype (bf16); accumulation is f32 via
+    ``preferred_element_type`` — flash-attention numerics without 2× HBM
+    traffic from f32 upcasts of the K/V stream.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = (q * scale).reshape(b, sq, kvh, rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    mask = _score_mask(q_pos, k_pos, window, use_window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def _chunked_sdpa(q, k, v, positions, window, scale, q_chunk: int,
+                  use_window=True):
+    """Exact attention with query-block chunking (scores stay [.., qc, S])."""
+    b, s, h, hd = q.shape
+    if s <= q_chunk:
+        return _sdpa(q, k, v, positions, positions, window, scale,
+                     use_window)
+    assert s % q_chunk == 0, (s, q_chunk)
+    nq = s // q_chunk
+    k_pos = positions
+
+    def body(i, out):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        q_pos = jax.lax.dynamic_slice_in_dim(positions, i * q_chunk, q_chunk)
+        o = _sdpa(q_blk, k, v, q_pos, k_pos, window, scale, use_window)
+        return jax.lax.dynamic_update_slice_in_dim(out, o, i * q_chunk,
+                                                   axis=1)
+
+    init = jnp.zeros((b, s, h, v.shape[-1]), q.dtype)
+    return jax.lax.fori_loop(0, nq, body, init)
+
+
+# ---------------------------------------------------------------- GQA fwd
+def gqa_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, *, window: int = 0,
+                use_window=True, theta: Optional[float] = None,
+                cache: Optional[dict] = None,
+                q_chunk: int = 1024):
+    """GQA attention.
+
+    Without cache: full/prefill pass over x [B,S,D]; returns (y, kv) where
+    kv = (k, v) for cache seeding.
+    With cache: single-step decode; x [B,1,D], cache {k, v [B,T,KV,hd],
+    index}; returns (y, updated (k, v)).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    theta = theta if theta is not None else cfg.rope_theta
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    kk = (x @ p["wk"]).reshape(b, s, kv, hd)
+    vv = (x @ p["wv"]).reshape(b, s, kv, hd)
+    pos2 = positions if positions.ndim == 2 else positions[None, :]
+    q = layers.apply_rope(q, pos2, theta)
+    kk = layers.apply_rope(kk, pos2, theta)
+    q = pspec.constrain(q, "batch", None, "heads", None)
+    kk = pspec.constrain(kk, "batch", None, "kv", None)
+    vv = pspec.constrain(vv, "batch", None, "kv", None)
+    scale = hd ** -0.5
+    # TP shardability: when KV heads don't divide the model axis but H
+    # does, expand KV to full heads (fused broadcast) so the attention
+    # einsums shard head-wise instead of replicating.
+    tp = pspec.logical_axis_size("heads")
+    expand = (h > kv) and (kv % tp != 0) and (h % tp == 0)
+
+    if cache is None:
+        pos1 = pos2[0]
+        kc, vc = kk, vv
+        if expand:
+            kc = pspec.constrain(jnp.repeat(kk, h // kv, axis=2),
+                                 "batch", None, "heads", None)
+            vc = pspec.constrain(jnp.repeat(vv, h // kv, axis=2),
+                                 "batch", None, "heads", None)
+        y = _chunked_sdpa(q, kc, vc, pos1, window, scale, q_chunk,
+                          use_window)
+        y = y.reshape(b, s, h * hd) @ p["wo"]
+        return y, (kk, vv)
+
+    # decode: write new kv at cache index, attend over [0, index]
+    idx = cache["index"]                       # scalar int32
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kk, idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vv, idx, axis=1)
+    t = ck.shape[1]
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    valid = k_pos <= idx
+    if window:
+        valid &= ((idx - k_pos) < window) | jnp.logical_not(use_window)
+    qg = (q * scale).reshape(b, 1, kv, h // kv, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bgrqk,bkgh->bqgrh", prob.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    y = y.reshape(b, 1, h * hd).astype(x.dtype) @ p["wo"]
+    return y, (ck, cv)
+
+
+# ---------------------------------------------------------------- MLA fwd
+def mla_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, *, cache: Optional[dict] = None,
+                q_chunk: int = 1024):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Cache stores the latent (c_kv, k_rope) only.  For prefill/training the
+    latent is up-projected and attention runs like MHA; decode re-derives
+    per-head keys from the cached latent.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos2 = positions if positions.ndim == 2 else positions[None, :]
+
+    q_lat = layers.rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(b, s, h, dn + dr)
+    q = pspec.constrain(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, pos2, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                       # [B,S,kv_lora+dr]
+    c_kv = layers.rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"],
+                           cfg.norm_eps)
+    k_rope = layers.apply_rope(kv_a[..., None, cfg.kv_lora_rank:], pos2,
+                               cfg.rope_theta)  # [B,S,1,dr]
+
+    if cache is not None:
+        idx = cache["index"]
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv, idx, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, idx, axis=1)
+
+    kv = (c_kv @ p["wkv_b"]).reshape(b, c_kv.shape[1], h, dn + dv)
+    kv = pspec.constrain(kv, "batch", None, "heads", None)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    scale = (dn + dr) ** -0.5
+    t = k_nope.shape[1]
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    if cache is None:
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, t, h, dr))], axis=-1)
+        y = _chunked_sdpa(q_full, k_full, v, pos2[0], 0, scale, q_chunk)
+        y = y.reshape(b, s, h * dv) @ p["wo"]
+        return y, (c_kv, k_rope)
+
+    idx = cache["index"]
+    valid = k_pos <= idx
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, h, dr))], axis=-1)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf * scale, kf,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    y = y.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return y, (c_kv, k_rope)

@@ -1,0 +1,116 @@
+"""Shared neural layers: norms, RoPE, SwiGLU, embeddings, frontend stubs.
+
+Everything is functional: ``init_*`` builds a param dict, ``apply`` is a pure
+function.  Layer stacking for ``lax.scan`` is done by the transformer via
+``jax.vmap`` over per-layer RNG keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jax.Array:
+    # stored as (scale - 1) so zero-init == identity
+    return jnp.zeros((d,), dtype=jnp.float32)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions [...,] -> angles [..., dim/2] (float32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """Rotate pairs.  x [B, S, H, hd]; positions [B, S]."""
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, theta)            # [B, S, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ SwiGLU
+def init_swiglu(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "w_gate": truncated_normal(k1, (d, f), std, dtype),
+        "w_up": truncated_normal(k2, (d, f), std, dtype),
+        "w_down": truncated_normal(k3, (f, d), f ** -0.5, dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(key, vocab: int, d: int, dtype, tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": truncated_normal(k1, (vocab, d), d ** -0.5, dtype)}
+    if not tie:
+        p["unembed"] = truncated_normal(k2, (vocab, d), d ** -0.5, dtype)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, media: jax.Array | None = None,
+          n_media: int = 0) -> jax.Array:
+    """Token embedding with modality-stub injection.
+
+    ``media`` [B, n_media, D] are *precomputed* frontend embeddings (the
+    CLIP/EnCodec frontend is a stub per the assignment).  They overwrite the
+    first ``n_media`` positions of the sequence.
+    """
+    x = p["tok"][tokens]
+    if media is not None and n_media:
+        prefix = media.astype(x.dtype)
+        x = jnp.concatenate([prefix, x[:, n_media:, :]], axis=1)
+    return x
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    w = p.get("unembed", p["tok"])
+    return x @ w.T
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE in f32 (stable logsumexp).
+
+    The label logit is extracted with an iota-compare masked sum rather
+    than ``take_along_axis`` so a vocab-sharded logits tensor reduces
+    locally + one small all-reduce (GSPMD would otherwise replicate the
+    full [B, S, V] f32 logits per chip).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    hit = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+           == labels[..., None])
+    ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

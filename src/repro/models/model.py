@@ -1,0 +1,273 @@
+"""Public model API: init / forward / prefill / decode_step / init_cache.
+
+``decode_step`` is the unit the ``decode_32k`` / ``long_500k`` dry-run cells
+lower: one new token against a seq_len-deep cache.  Cache layouts per family
+are documented on ``init_cache``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, layers, ssm, transformer
+from .transformer import forward, init_params, layer_flags
+from repro.configs.base import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------- init_cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               index: int = 0) -> dict:
+    """Decode cache.
+
+    attn:   {k, v: [L, B, T, KV, hd], index}
+    mla:    {c_kv: [L, B, T, ckv], k_rope: [L, B, T, 1, dr], index}
+    mamba2: {h: [L, B, P, N, hd], conv: [L, B, K-1, C]}
+            (+ hybrid: attn_k/attn_v [G, B, T, KV, hd], index)
+    rwkv6:  {s: [L, B, H, hd, hd], last_tm/last_cm: [L, B, D]}
+    """
+    dt = _dtype(cfg)
+    l, d = cfg.n_layers, cfg.d_model
+    if cfg.block_type == "attn":
+        if cfg.mla:
+            return {
+                "c_kv": jnp.zeros((l, batch, max_len, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((l, batch, max_len, 1, cfg.qk_rope_dim),
+                                    dt),
+                "index": jnp.int32(index),
+            }
+        hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+        return {
+            "k": jnp.zeros((l, batch, max_len, kv, hd), dt),
+            "v": jnp.zeros((l, batch, max_len, kv, hd), dt),
+            "index": jnp.int32(index),
+        }
+    if cfg.block_type == "mamba2":
+        d_in = cfg.ssm_expand * d
+        ph = d_in // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        conv_ch = d_in + 2 * n
+        cache = {
+            "h": jnp.zeros((l, batch, ph, n, cfg.ssm_head_dim),
+                           jnp.float32),
+            "conv": jnp.zeros((l, batch, cfg.conv_kernel - 1, conv_ch), dt),
+        }
+        if cfg.hybrid_attn_every:
+            g = cfg.n_layers // cfg.hybrid_attn_every
+            hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+            cache["attn_k"] = jnp.zeros((g, batch, max_len, kv, hd), dt)
+            cache["attn_v"] = jnp.zeros((g, batch, max_len, kv, hd), dt)
+            cache["index"] = jnp.int32(index)
+        return cache
+    if cfg.block_type == "rwkv6":
+        h = max(1, d // cfg.ssm_head_dim)
+        hd = d // h
+        return {
+            "s": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+            "last_tm": jnp.zeros((l, batch, d), dt),
+            "last_cm": jnp.zeros((l, batch, d), dt),
+        }
+    raise ValueError(cfg.block_type)
+
+
+# ---------------------------------------------------------------- prefill
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            media: Optional[jax.Array] = None, *, max_len: int,
+            q_chunk: int = 1024):
+    """Run the full prompt, return (last-token logits, primed cache)."""
+    b, s = tokens.shape
+    logits, _, seeds = forward(cfg, params, tokens, media,
+                               collect_cache=True, q_chunk=q_chunk)
+    cache = init_cache(cfg, b, max_len)
+    if cfg.block_type == "attn":
+        if cfg.mla:
+            c_kv, k_rope = seeds
+            cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=2)
+            cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0,
+                axis=2)
+        else:
+            k, v = seeds
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=2)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=2)
+        cache["index"] = jnp.int32(s)
+    elif cfg.block_type == "mamba2":
+        if cfg.hybrid_attn_every:
+            m_seeds, a_seeds = seeds["mamba_groups"], seeds["attn"]
+            every = cfg.hybrid_attn_every
+            g = cfg.n_layers // every
+            h = m_seeds["h"].reshape((g * every,) + m_seeds["h"].shape[2:])
+            cv = m_seeds["conv"].reshape((g * every,)
+                                         + m_seeds["conv"].shape[2:])
+            if seeds["mamba_tail"] is not None:
+                h = jnp.concatenate([h, seeds["mamba_tail"]["h"]], axis=0)
+                cv = jnp.concatenate([cv, seeds["mamba_tail"]["conv"]],
+                                     axis=0)
+            cache["h"], cache["conv"] = h, cv
+            ak, av = a_seeds
+            cache["attn_k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["attn_k"], ak.astype(cache["attn_k"].dtype), 0, axis=2)
+            cache["attn_v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["attn_v"], av.astype(cache["attn_v"].dtype), 0, axis=2)
+            cache["index"] = jnp.int32(s)
+        else:
+            cache["h"] = seeds["mamba"]["h"]
+            cache["conv"] = seeds["mamba"]["conv"]
+    else:  # rwkv6
+        st, last_cm = seeds
+        cache["s"] = st["s"]
+        cache["last_tm"] = st["last"]
+        cache["last_cm"] = last_cm
+    return logits[:, -1, :], cache
+
+
+# ------------------------------------------------------------ decode_step
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array):
+    """One token for every sequence.  tokens [B] -> (logits [B, V], cache)."""
+    b = tokens.shape[0]
+    x = params["embed"]["tok"][tokens][:, None, :]      # [B, 1, D]
+    if cfg.block_type == "attn":
+        x, cache = _decode_attn(cfg, params, cache, x)
+    elif cfg.block_type == "mamba2":
+        x, cache = _decode_mamba(cfg, params, cache, x)
+    else:
+        x, cache = _decode_rwkv(cfg, params, cache, x)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x)
+    return logits[:, 0, :], cache
+
+
+def _decode_attn(cfg, params, cache, x):
+    use_window, thetas = layer_flags(cfg)
+    idx = cache["index"]
+    positions = jnp.full((x.shape[0], 1), idx, jnp.int32)
+    blocks = params["blocks"]
+
+    def body(x, xs):
+        if cfg.mla:
+            blk, ckv_l, kr_l = xs
+            h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            a, (ckv, kr) = attention.mla_forward(
+                blk["attn"], cfg, h, positions,
+                cache={"c_kv": ckv_l, "k_rope": kr_l, "index": idx})
+            new_slices = (ckv, kr)
+        else:
+            blk, use_w, theta, k_l, v_l = xs
+            h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            a, (ck, cv) = attention.gqa_forward(
+                blk["attn"], cfg, h, positions, window=cfg.sliding_window,
+                use_window=use_w, theta=theta,
+                cache={"k": k_l, "v": v_l, "index": idx})
+            new_slices = (ck, cv)
+        x = x + a
+        h = layers.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, _ = moe_forward_decode(blk["ffn"], cfg, h)
+        else:
+            f = layers.swiglu(blk["ffn"], h)
+        return x + f, new_slices
+
+    if cfg.mla:
+        x, (ckv, kr) = jax.lax.scan(body, x,
+                                    (blocks, cache["c_kv"],
+                                     cache["k_rope"]))
+        cache = dict(cache, c_kv=ckv, k_rope=kr, index=idx + 1)
+    else:
+        x, (k, v) = jax.lax.scan(
+            body, x, (blocks, use_window, thetas, cache["k"], cache["v"]))
+        cache = dict(cache, k=k, v=v, index=idx + 1)
+    return x, cache
+
+
+def moe_forward_decode(p, cfg, x):
+    """MoE for tiny token counts (decode): group = the whole batch row."""
+    from . import moe as moe_mod
+    b, s, d = x.shape
+    return moe_mod.moe_forward(p, cfg, x, group_size=b * s)
+
+
+def _decode_mamba(cfg, params, cache, x):
+    blocks = params["blocks"]
+
+    def mamba_body(x, xs):
+        blk, h_l, conv_l = xs
+        h = layers.rms_norm(x, blk["ln"], cfg.norm_eps)
+        y, st = ssm.mamba2_forward(blk["mixer"], cfg, h,
+                                   state={"h": h_l, "conv": conv_l})
+        return x + y, (st["h"], st["conv"])
+
+    every = cfg.hybrid_attn_every
+    l = cfg.n_layers
+    if not every:
+        x, (h, conv) = jax.lax.scan(mamba_body, x,
+                                    (blocks, cache["h"], cache["conv"]))
+        return x, dict(cache, h=h, conv=conv)
+
+    shared = params["shared"]
+    idx = cache["index"]
+    positions = jnp.full((x.shape[0], 1), idx, jnp.int32)
+    g = l // every
+    rem = l - g * every
+    grouped = jax.tree.map(
+        lambda v: v[:g * every].reshape((g, every) + v.shape[1:]), blocks)
+    h_g = cache["h"][:g * every].reshape((g, every)
+                                         + cache["h"].shape[1:])
+    c_g = cache["conv"][:g * every].reshape((g, every)
+                                            + cache["conv"].shape[1:])
+
+    def group_body(x, xs):
+        grp, h_l, c_l, ak_l, av_l = xs
+        x, (h_new, c_new) = jax.lax.scan(mamba_body, x, (grp, h_l, c_l))
+        hh = layers.rms_norm(x, shared["ln_a"], cfg.norm_eps)
+        a, (ck, cv) = attention.gqa_forward(
+            shared["attn"], cfg, hh, positions,
+            cache={"k": ak_l, "v": av_l, "index": idx})
+        x = x + a
+        hh = layers.rms_norm(x, shared["ln_f"], cfg.norm_eps)
+        x = x + layers.swiglu(shared["ffn"], hh)
+        return x, (h_new, c_new, ck, cv)
+
+    x, (h_new, c_new, ak, av) = jax.lax.scan(
+        group_body, x, (grouped, h_g, c_g, cache["attn_k"],
+                        cache["attn_v"]))
+    h_new = h_new.reshape((g * every,) + h_new.shape[2:])
+    c_new = c_new.reshape((g * every,) + c_new.shape[2:])
+    if rem:
+        tail = jax.tree.map(lambda v: v[g * every:], blocks)
+        x, (h_t, c_t) = jax.lax.scan(
+            mamba_body, x, (tail, cache["h"][g * every:],
+                            cache["conv"][g * every:]))
+        h_new = jnp.concatenate([h_new, h_t], axis=0)
+        c_new = jnp.concatenate([c_new, c_t], axis=0)
+    return x, dict(cache, h=h_new, conv=c_new, attn_k=ak, attn_v=av,
+                   index=idx + 1)
+
+
+def _decode_rwkv(cfg, params, cache, x):
+    blocks = params["blocks"]
+
+    def body(x, xs):
+        blk, s_l, ltm_l, lcm_l = xs
+        h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        y, st = ssm.rwkv6_time_mix(blk["tm"], cfg, h,
+                                   state={"s": s_l, "last": ltm_l})
+        x = x + y
+        h = layers.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        y, lcm = ssm.rwkv6_channel_mix(blk["cm"], cfg, h, state=lcm_l)
+        x = x + y
+        return x, (st["s"], st["last"], lcm)
+
+    x, (s_new, ltm, lcm) = jax.lax.scan(
+        body, x, (blocks, cache["s"], cache["last_tm"], cache["last_cm"]))
+    return x, dict(cache, s=s_new, last_tm=ltm, last_cm=lcm)

@@ -1,0 +1,89 @@
+"""Mixture-of-Experts FFN (dbrx 16e top-4, deepseek-v2 2 shared + 160e top-6).
+
+GShard-style grouped one-hot dispatch: tokens are reshaped into groups of
+``group_size``, each group gets a static per-expert capacity
+``C = ceil(group_size · top_k / E · capacity_factor)`` and dispatch/combine
+are einsums — so expert compute is top-k-proportional (HLO FLOPs track
+6·N_active·D, which §Roofline checks), the dispatch one-hots stay
+``group_size × E × C`` (never token-count quadratic), and GSPMD turns the
+token→expert regrouping into all-to-alls when experts are sharded over the
+``model`` axis (EP).
+
+Router is deterministic (no jitter), gates are the softmax of the top-k
+logits, plus the switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, pspec
+from repro.configs.base import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.truncated_normal(ks[0], (d, e), d ** -0.5,
+                                          jnp.float32),
+        "w_gate": layers.truncated_normal(ks[1], (e, d, f), d ** -0.5, dtype),
+        "w_up": layers.truncated_normal(ks[2], (e, d, f), d ** -0.5, dtype),
+        "w_down": layers.truncated_normal(ks[3], (e, f, d), f ** -0.5, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_swiglu(
+            ks[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def moe_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                group_size: int = 512) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    gs = min(group_size, t)
+    assert t % gs == 0, (t, gs)
+    g = t // gs
+    cap = max(1, int(gs * k / e * cfg.capacity_factor))
+
+    xg = x.reshape(g, gs, d)
+    logits = (xg.astype(jnp.float32) @ p["router"])          # [g, gs, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                   # [g, gs, K]
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) selection within its expert's capacity
+    sel = jax.nn.one_hot(top_i, e, dtype=jnp.int32)          # [g, gs, K, E]
+    sel_flat = sel.reshape(g, gs * k, e)
+    pos = jnp.cumsum(sel_flat, axis=1) - sel_flat            # [g, gs*K, E]
+    pos = pos.reshape(g, gs, k, e)
+    in_cap = (pos < cap) & (sel > 0)
+    slot = jnp.where(in_cap, pos, cap)                       # cap = dropped
+
+    disp = jax.nn.one_hot(slot, cap, dtype=x.dtype) \
+        * sel.astype(x.dtype)[..., None]                     # [g,gs,K,E,C]
+    dispatch = disp.sum(axis=2)                              # [g, gs, E, C]
+    combine = (disp * gates.astype(x.dtype)[..., None, None]).sum(axis=2)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)          # [g, E, C, D]
+    xe = pspec.constrain(xe, "batch", "experts", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = pspec.constrain(h, "batch", "experts", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # [g, E, C, D]
+    ye = pspec.constrain(ye, "batch", "experts", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye).reshape(b, s, d)
+    y = pspec.constrain(y, "batch", None, None)
+
+    # switch-style load-balance loss
+    me = probs.mean(axis=(0, 1))                             # [E]
+    ce = sel.astype(jnp.float32).sum(2).mean(axis=(0, 1)) / k
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    if "shared" in p:
+        y = y + layers.swiglu(p["shared"], x)
+    return y, aux

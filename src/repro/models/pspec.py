@@ -1,0 +1,95 @@
+"""Logical-axis activation sharding constraints.
+
+Models call ``constrain(x, "batch", None, "heads", None)``; the launcher
+installs a mesh + logical→physical mapping before lowering
+(``set_mesh(mesh, {"batch": ("pod","data"), "heads": "model", ...})``).
+Without an installed mesh every call is a no-op, so tests/examples on one
+CPU device never notice.
+
+Divisibility guard: a logical axis resolves to its physical axis only when
+the dimension divides evenly; otherwise that dim is left unsharded (e.g.
+phi3-medium's 40 heads on a 16-wide model axis — documented in
+EXPERIMENTS.md §Perf as a padding opportunity).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], mapping: Optional[dict] = None) -> None:
+    _state.mesh = mesh
+    _state.mapping = mapping or {}
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, mapping: dict):
+    prev = (getattr(_state, "mesh", None), getattr(_state, "mapping", {}))
+    set_mesh(mesh, mapping)
+    try:
+        yield
+    finally:
+        set_mesh(*prev)
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, (tuple, list)):
+        n = 1
+        for a in phys:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys]
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    mapping = getattr(_state, "mapping", {})
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        phys = mapping.get(name) if name is not None else None
+        if phys is None:
+            spec.append(None)
+            continue
+        size = _axis_size(mesh, phys)
+        spec.append(tuple(phys) if isinstance(phys, (tuple, list)) else phys
+                    if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def logical_axis_size(name: str) -> int:
+    """Physical size of a logical axis under the installed mapping (1 if
+    no mesh/mapping)."""
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return 1
+    phys = getattr(_state, "mapping", {}).get(name)
+    return _axis_size(mesh, phys) if phys is not None else 1
+
+
+def default_mapping(multi_pod: bool) -> dict:
+    return {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "heads": "model",
+        "kv": "model",
+        "vocab": "model",
+        "ff": "model",
+        "experts": "model",
+        "embed": None,
+        "seq": None,
+        "sp": "data",     # sequence-parallel axis for batch-1 long context
+    }

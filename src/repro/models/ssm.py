@@ -1,0 +1,376 @@
+"""State-space / linear-attention mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD algorithm — intra-chunk attention-like matmuls
+plus an inter-chunk state scan — so training is MXU-dominated and HLO FLOPs
+reflect the real O(S·d·N) cost (no associative-scan 2× blowup).  RWKV6 ships
+two formulations: the baseline per-step ``lax.scan`` recurrence (the paper
+architecture's natural RNN form) and a chunked parallel form
+(``rwkv6_chunked``) used by the §Perf hillclimb.  Both are exact and
+cross-checked in tests.
+
+Decode for both is O(1)/token on a small carried state — which is why these
+archs run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, pspec
+from repro.configs.base import ModelConfig
+
+
+# =============================================================== Mamba2 ==
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    p_heads = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        # fused in_proj: [z | x | B | C | dt]
+        "in_proj": layers.truncated_normal(
+            ks[0], (d, 2 * d_in + 2 * n + p_heads), d ** -0.5, dtype),
+        "conv_w": layers.truncated_normal(
+            ks[1], (cfg.conv_kernel, conv_ch), cfg.conv_kernel ** -0.5,
+            dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, p_heads)).astype(
+            jnp.float32),
+        "d_skip": jnp.ones((p_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, p_heads))).astype(jnp.float32),
+        "norm": layers.init_rms_norm(d_in, dtype),
+        "out_proj": layers.truncated_normal(ks[2], (d_in, d), d_in ** -0.5,
+                                            dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x [B,S,C], w [K,C] -> (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    p_heads = d_in // cfg.ssm_head_dim
+    z = proj[..., :d_in]
+    rest = proj[..., d_in:]
+    xbc = rest[..., :d_in + 2 * n]
+    dt = rest[..., d_in + 2 * n:]
+    return z, xbc, dt, d_in, n, p_heads
+
+
+def mamba2_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                   state: Optional[dict] = None):
+    """Mamba2 SSD mixer.  x [B,S,D] -> (y, new_state).
+
+    ``state`` (decode): {"h": [B,P,N,hd], "conv": [B,K-1,C]}.  When state is
+    None a full chunked-SSD pass runs and the final state is returned (for
+    prefill→decode handoff).
+    """
+    b, s, d = x.shape
+    hd = cfg.ssm_head_dim
+    proj = pspec.constrain(x @ p["in_proj"], "batch", None, "ff")
+    z, xbc, dt, d_in, n, ph = _split_proj(cfg, proj)
+
+    if state is not None and s == 1:
+        return _mamba2_step(p, cfg, x, z, xbc, dt, state)
+
+    xbc, conv_state = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"],
+        state["conv"] if state is not None else None)
+
+    # pad S to a chunk multiple with dt≈0 steps (decay 1, zero input) so the
+    # final state is untouched by padding
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-20.0)
+    sp = s + pad
+    xs = pspec.constrain(xbc[..., :d_in].reshape(b, sp, ph, hd),
+                         "batch", None, "heads", None)
+    bs = pspec.constrain(xbc[..., d_in:d_in + n], "batch", None, None)
+    cs = pspec.constrain(xbc[..., d_in + n:], "batch", None, None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,P]
+    a = -jnp.exp(p["a_log"])                                     # [P] (<0)
+    la = dt * a[None, None, :]                                   # log-decay
+
+    h0 = state["h"] if state is not None else jnp.zeros(
+        (b, ph, n, hd), jnp.float32)
+    y, h_last = _ssd_chunked(xs.astype(jnp.float32),
+                             bs.astype(jnp.float32),
+                             cs.astype(jnp.float32), dt, la, h0,
+                             chunk=chunk)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    if pad:
+        y = y[:, :s]
+        xs = xs[:, :s]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def _ssd_chunked(xs, bs, cs, dt, la, h0, chunk: int):
+    """Chunked SSD.  xs [B,S,P,hd] bs/cs [B,S,N] dt/la [B,S,P].
+
+    Returns (y [B,S,P,hd] f32, h_last [B,P,N,hd] f32).
+    """
+    b, s, ph, hd = xs.shape
+    n = bs.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    r = lambda t: t.reshape((b, nc, chunk) + t.shape[2:])
+    xs, bs, cs, dt, la = map(r, (xs, bs, cs, dt, la))
+
+    cum = jnp.cumsum(la, axis=2)                     # [B,nc,L,P]
+    total = cum[:, :, -1, :]                         # [B,nc,P]
+
+    # intra-chunk: y[t] = C_t · Σ_{s<=t} exp(cum_t - cum_s) dt_s B_s x_s
+    cb = jnp.einsum("bcln,bcmn->bclm", cs, bs)       # [B,nc,L,L]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,L,L,P]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    m = cb[..., None] * w                            # [B,nc,L,L,P]
+    dx = dt[..., None] * xs                          # [B,nc,L,P,hd]
+    y_intra = jnp.einsum("bclmp,bcmph->bclph", m, dx)
+
+    # chunk summaries: S_c = Σ_s exp(total - cum_s) dt_s B_s ⊗ x_s
+    wend = jnp.exp(total[:, :, None, :] - cum)       # [B,nc,L,P]
+    sc = jnp.einsum("bcln,bclp,bclph->bcpnh", bs, wend * dt, xs)
+
+    # inter-chunk scan: H_{c+1} = exp(total_c) H_c + S_c
+    decay = jnp.exp(total)                           # [B,nc,P]
+
+    def scan_fn(h, inp):
+        dec, s_c = inp                               # [B,P], [B,P,N,hd]
+        h_new = dec[:, :, None, None] * h + s_c
+        return h_new, h
+
+    (h_last, h_starts) = jax.lax.scan(
+        scan_fn, h0, (decay.swapaxes(0, 1), sc.swapaxes(0, 1)))
+    h_starts = h_starts.swapaxes(0, 1)               # [B,nc,P,N,hd] (entry)
+
+    # inter-chunk contribution: y[t] += C_t · exp(cum_t) H_cstart
+    y_inter = jnp.einsum("bcln,bclp,bcpnh->bclph", cs, jnp.exp(cum),
+                         h_starts)
+    y = (y_intra + y_inter).reshape(b, s, ph, hd)
+    return y, h_last
+
+
+def _mamba2_step(p, cfg, x, z, xbc, dt, state):
+    """O(1) decode step."""
+    b = x.shape[0]
+    hd = cfg.ssm_head_dim
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    ph = d_in // hd
+    k = p["conv_w"].shape[0]
+    conv = state["conv"]
+    xp = jnp.concatenate([conv, xbc], axis=1)        # [B, K, C]
+    y = (xp * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+    xbc1 = jax.nn.silu(y)                            # [B, C]
+    new_conv = xp[:, 1:, :]
+    xs = xbc1[:, :d_in].reshape(b, ph, hd).astype(jnp.float32)
+    bs = xbc1[:, d_in:d_in + n].astype(jnp.float32)
+    cs = xbc1[:, d_in + n:].astype(jnp.float32)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dtp * a[None, :])                  # [B,P]
+    h = state["h"] * dec[:, :, None, None] + jnp.einsum(
+        "bn,bp,bph->bpnh", bs, dtp, xs)
+    yh = jnp.einsum("bn,bpnh->bph", cs, h)
+    yh = yh + p["d_skip"][None, :, None] * xs
+    yh = yh.reshape(b, 1, d_in).astype(x.dtype)
+    yh = layers.rms_norm(yh * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return yh @ p["out_proj"], {"h": h, "conv": new_conv}
+
+
+# ================================================================ RWKV6 ==
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = max(1, d // cfg.ssm_head_dim)
+    hd = d // h
+    lora = max(32, d // 16)
+    ks = jax.random.split(key, 10)
+    std = d ** -0.5
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,w,g token-shift
+        "w_r": layers.truncated_normal(ks[0], (d, d), std, dtype),
+        "w_k": layers.truncated_normal(ks[1], (d, d), std, dtype),
+        "w_v": layers.truncated_normal(ks[2], (d, d), std, dtype),
+        "w_g": layers.truncated_normal(ks[3], (d, d), std, dtype),
+        "w_o": layers.truncated_normal(ks[4], (d, d), std, dtype),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),    # decay base
+        "w_lora_a": layers.truncated_normal(ks[5], (d, lora), std,
+                                            jnp.float32),
+        "w_lora_b": layers.truncated_normal(ks[6], (lora, d),
+                                            lora ** -0.5, jnp.float32),
+        "u": layers.truncated_normal(ks[7], (h, hd), hd ** -0.5,
+                                     jnp.float32),
+        "ln_x": layers.init_rms_norm(d, dtype),
+    }
+
+
+def init_rwkv6_cm(key, cfg: ModelConfig, dtype) -> dict:
+    """RWKV channel-mix (the arch's FFN)."""
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "w_r": layers.truncated_normal(ks[0], (d, d), d ** -0.5, dtype),
+        "w_k": layers.truncated_normal(ks[1], (d, f), d ** -0.5, dtype),
+        "w_v": layers.truncated_normal(ks[2], (f, d), f ** -0.5, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """x [B,S,D] -> x shifted right by one (first uses ``last`` or zeros)."""
+    b, s, d = x.shape
+    if last is None:
+        last = jnp.zeros((b, 1, d), x.dtype)
+    else:
+        last = last.reshape(b, 1, d).astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def rwkv6_time_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                   state: Optional[dict] = None, chunked: bool = False):
+    """WKV6 time-mix.  x [B,S,D] -> (y, new_state).
+
+    state: {"s": [B,H,hd,hd], "last": [B,D]}
+    """
+    b, s, d = x.shape
+    h = max(1, d // cfg.ssm_head_dim)
+    hd = d // h
+    last = state["last"] if state is not None else None
+    xs = _token_shift(x, last)
+    mix = lambda i: x + (xs - x) * p["mu"][i].astype(x.dtype)
+    # stay in the model dtype across the TP projection boundary (backward
+    # d(mix) all-reduces then run at bf16 width -- §Perf iteration R3);
+    # the recurrence itself upcasts to f32 below.
+    r = pspec.constrain((mix(0) @ p["w_r"]).reshape(b, s, h, hd),
+                        "batch", None, "heads", None)
+    k = pspec.constrain((mix(1) @ p["w_k"]).reshape(b, s, h, hd),
+                        "batch", None, "heads", None)
+    v = pspec.constrain((mix(2) @ p["w_v"]).reshape(b, s, h, hd),
+                        "batch", None, "heads", None)
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x_shift))).
+    # The per-step log-decay is floored so the chunked formulation's
+    # exp(-cumsum) stays in f32 range: floor = 80/chunk (e^80 < f32 max).
+    # Scan and chunked share the floor, so they remain bit-comparable.
+    chunk_len = max(1, min(cfg.ssm_chunk, 32, s))
+    floor = 80.0 / chunk_len
+    wlog = p["w0"] + jnp.tanh(mix(3).astype(jnp.float32) @ p["w_lora_a"]) \
+        @ p["w_lora_b"]
+    logw = -jnp.minimum(jnp.exp(wlog), floor)
+    w = jnp.exp(logw).reshape(b, s, h, hd)               # decay in (0,1)
+    g = jax.nn.silu(mix(4) @ p["w_g"])
+
+    s0 = state["s"] if state is not None else jnp.zeros((b, h, hd, hd),
+                                                        jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if chunked and s > 1:
+        y, s_last = _wkv6_chunked(rf, kf, vf, w, p["u"], s0,
+                                  chunk=chunk_len)
+    else:
+        y, s_last = _wkv6_scan(rf, kf, vf, w, p["u"], s0)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = layers.rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    out = y @ p["w_o"]
+    return out, {"s": s_last, "last": x[:, -1, :]}
+
+
+def _wkv6_scan(r, k, v, w, u, s0):
+    """Reference recurrence.  r,k,v,w [B,S,H,hd]; u [H,hd]; s0 [B,H,hd,hd].
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ);  S_t = diag(w_t) S_{t-1}
+          + k_t v_tᵀ
+    """
+    def step(s_prev, inp):
+        rt, kt, vt, wt = inp                          # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]      # [B,H,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       s_prev + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s_prev + kv
+        return s_new, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_last                  # [B,S,H,hd]
+
+
+def _wkv6_chunked(r, k, v, w, u, s0, chunk: int):
+    """Chunked-parallel WKV6 (exact given the shared decay floor; §Perf).
+
+    Factorized intra-chunk form: exp(cum_excl_t - cum_s) = exp(cum_excl_t)
+    · exp(-cum_s), so the pairwise decay matrix never materialises at
+    [L, L, D] — intra-chunk work is two plain [L, L] matmuls per head.
+    The decay floor (see ``rwkv6_time_mix``) bounds exp(-cum_s) ≤ e^{5·L},
+    with floor = 80/chunk everything stays in f32 range.
+    """
+    b, s, h, hd = r.shape
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    rs = lambda t: t.reshape(b, nc, chunk, h, hd)
+    r, k, v, w = map(rs, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                    # inclusive prefix
+    cum_excl = cum - logw                             # exclusive prefix
+    total = cum[:, :, -1]                             # [B,nc,H,hd]
+
+    # intra-chunk strict-lower-triangular linear attention
+    r_dec = r * jnp.exp(cum_excl)                     # exp <= 1, safe
+    k_dec = k * jnp.exp(-cum)                         # bounded by floor
+    att = jnp.einsum("bclhd,bcmhd->bclmh", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+    att = jnp.where(tri[None, None, :, :, None], att, 0.0)
+    y_intra = jnp.einsum("bclmh,bcmhd->bclhd", att, v)
+    # diagonal bonus term
+    y_diag = jnp.einsum("bclhd,bclhd,bclhe->bclhe",
+                        r * u[None, None, None], k, v)
+
+    # chunk summary: S_c_add = Σ_s exp(total - cum_s) k_s v_sᵀ
+    wk = jnp.exp(total[:, :, None] - cum) * k
+    sc = jnp.einsum("bclhd,bclhe->bchde", wk, v)
+
+    def scan_fn(s_prev, inp):
+        dec, s_add = inp                              # [B,H,hd],[B,H,hd,hd]
+        s_new = dec[..., None] * s_prev + s_add
+        return s_new, s_prev
+
+    dec_c = jnp.exp(total).swapaxes(0, 1)             # [nc,B,H,hd]
+    s_last, s_starts = jax.lax.scan(scan_fn, s0,
+                                    (dec_c, sc.swapaxes(0, 1)))
+    s_starts = s_starts.swapaxes(0, 1)                # [B,nc,H,hd,hd]
+
+    y_inter = jnp.einsum("bclhd,bchde->bclhe",
+                         r * jnp.exp(cum_excl), s_starts)
+    y = (y_intra + y_diag + y_inter).reshape(b, s, h, hd)
+    return y, s_last
+
+
+def rwkv6_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                      state: Optional[jax.Array] = None):
+    """RWKV FFN.  state = last token [B,D] for decode."""
+    xs = _token_shift(x, state)
+    mix = lambda i: x + (xs - x) * p["mu"][i].astype(x.dtype)
+    r = jax.nn.sigmoid(mix(0) @ p["w_r"])
+    kk = jnp.square(jax.nn.relu(mix(1) @ p["w_k"]))
+    return r * (kk @ p["w_v"]), x[:, -1, :]

@@ -1,0 +1,253 @@
+"""Backbone composition: scan-over-layers for every family.
+
+Families and their block structure:
+  * attn (dense / moe / vlm / audio):  x += Attn(LN(x));  x += FFN(LN(x))
+    FFN = SwiGLU or MoE (+ shared experts).  gemma3's 5:1 local:global
+    striping rides through the scan as per-layer (use_window, theta) xs.
+  * mla: same with MLA attention (deepseek-v2).
+  * mamba2 (+ zamba2 hybrid): x += Mamba2(LN(x)); hybrid applies one
+    *shared-weight* attention+MLP block after every ``hybrid_attn_every``
+    mamba layers (zamba2's signature weight sharing).
+  * rwkv6: x += TimeMix(LN(x)); x += ChannelMix(LN(x)).
+
+All layers are stacked ([L, ...] leading dim) and driven by ``lax.scan`` so
+tracing/compile cost is O(1) in depth — required for the 62-layer 27B and
+60-layer 236B dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, layers, moe, pspec, ssm
+from repro.configs.base import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ------------------------------------------------------------------ init
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": layers.init_embedding(keys[0], cfg.vocab, cfg.d_model, dt,
+                                       cfg.tie_embeddings),
+        "final_norm": layers.init_rms_norm(cfg.d_model, dt),
+    }
+    l = cfg.n_layers
+    if cfg.block_type == "attn":
+        attn_init = (functools.partial(attention.init_mla, cfg=cfg, dtype=dt)
+                     if cfg.mla else
+                     functools.partial(attention.init_gqa, cfg=cfg, dtype=dt))
+        params["blocks"] = {
+            "attn": _stack_init(lambda k: attn_init(k), keys[1], l),
+            "ln1": jnp.zeros((l, cfg.d_model), jnp.float32),
+            "ln2": jnp.zeros((l, cfg.d_model), jnp.float32),
+        }
+        if cfg.is_moe:
+            params["blocks"]["ffn"] = _stack_init(
+                lambda k: moe.init_moe(k, cfg, dt), keys[2], l)
+        else:
+            params["blocks"]["ffn"] = _stack_init(
+                lambda k: layers.init_swiglu(k, cfg.d_model, cfg.d_ff, dt),
+                keys[2], l)
+    elif cfg.block_type == "mamba2":
+        params["blocks"] = {
+            "mixer": _stack_init(lambda k: ssm.init_mamba2(k, cfg, dt),
+                                 keys[1], l),
+            "ln": jnp.zeros((l, cfg.d_model), jnp.float32),
+        }
+        if cfg.hybrid_attn_every:
+            params["shared"] = {
+                "attn": attention.init_gqa(keys[3], cfg, dt),
+                "ffn": layers.init_swiglu(keys[4], cfg.d_model, cfg.d_ff,
+                                          dt),
+                "ln_a": layers.init_rms_norm(cfg.d_model, dt),
+                "ln_f": layers.init_rms_norm(cfg.d_model, dt),
+            }
+    elif cfg.block_type == "rwkv6":
+        params["blocks"] = {
+            "tm": _stack_init(lambda k: ssm.init_rwkv6(k, cfg, dt),
+                              keys[1], l),
+            "cm": _stack_init(lambda k: ssm.init_rwkv6_cm(k, cfg, dt),
+                              keys[2], l),
+            "ln1": jnp.zeros((l, cfg.d_model), jnp.float32),
+            "ln2": jnp.zeros((l, cfg.d_model), jnp.float32),
+        }
+    else:
+        raise ValueError(cfg.block_type)
+    return params
+
+
+# -------------------------------------------------------- per-layer flags
+def layer_flags(cfg: ModelConfig):
+    """(use_window [L] bool, theta [L] f32) for gemma3-style striping."""
+    l = cfg.n_layers
+    if cfg.local_per_global:
+        # pattern L,L,L,L,L,G repeating (last of each group is global)
+        idx = np.arange(l)
+        is_global = (idx % (cfg.local_per_global + 1)
+                     == cfg.local_per_global)
+    else:
+        is_global = np.ones(l, dtype=bool) if cfg.sliding_window == 0 \
+            else np.zeros(l, dtype=bool)
+    theta = np.where(is_global,
+                     cfg.rope_theta_global or cfg.rope_theta,
+                     cfg.rope_theta)
+    use_window = ~is_global
+    return jnp.asarray(use_window), jnp.asarray(theta, np.float32)
+
+
+# --------------------------------------------------------------- forward
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            media: Optional[jax.Array] = None, *, remat: bool = False,
+            remat_policy: str = "", collect_cache: bool = False,
+            q_chunk: int = 1024, rwkv_chunked: bool = False):
+    """Full-sequence pass.  Returns (logits, aux, cache_seeds).
+
+    ``cache_seeds`` (when collect_cache) holds per-layer KV/state needed to
+    continue decoding after prefill.
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x = layers.embed(params["embed"], tokens, media, cfg.n_media_tokens)
+    x = pspec.constrain(x, "batch", "seq", "embed")
+
+    rm = (remat, remat_policy)
+    if cfg.block_type == "attn":
+        x, aux, seeds = _attn_stack(cfg, params, x, positions, rm,
+                                    collect_cache, q_chunk)
+    elif cfg.block_type == "mamba2":
+        x, aux, seeds = _mamba_stack(cfg, params, x, positions, rm,
+                                     collect_cache, q_chunk)
+    else:
+        x, aux, seeds = _rwkv_stack(cfg, params, x, rm, collect_cache,
+                                    rwkv_chunked)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x)
+    logits = pspec.constrain(logits, "batch", "seq", "vocab")
+    return logits, aux, seeds
+
+
+def _maybe_remat(fn, remat, policy_name: str = ""):
+    if not remat:
+        return fn
+    if policy_name == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _attn_stack(cfg, params, x, positions, remat, collect_cache, q_chunk):
+    use_window, thetas = layer_flags(cfg)
+    blocks = params["blocks"]
+
+    def body(carry, xs):
+        x, aux = carry
+        blk, use_w, theta = xs
+        h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        if cfg.mla:
+            a, kv = attention.mla_forward(blk["attn"], cfg, h, positions,
+                                          q_chunk=q_chunk)
+        else:
+            a, kv = attention.gqa_forward(
+                blk["attn"], cfg, h, positions,
+                window=cfg.sliding_window, use_window=use_w, theta=theta,
+                q_chunk=q_chunk)
+        x = x + a
+        h = layers.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, a_loss = moe.moe_forward(blk["ffn"], cfg, h)
+            aux = aux + a_loss
+        else:
+            f = layers.swiglu(blk["ffn"], h)
+        x = pspec.constrain(x + f, "batch", "seq", "embed")
+        out = kv if collect_cache else None
+        return (x, aux), out
+
+    body = _maybe_remat(body, *remat)
+    (x, aux), seeds = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (blocks, use_window, thetas))
+    return x, aux, seeds
+
+
+def _mamba_stack(cfg, params, x, positions, remat, collect_cache, q_chunk):
+    blocks = params["blocks"]
+    every = cfg.hybrid_attn_every
+    l = cfg.n_layers
+
+    def mamba_body(carry, blk):
+        x = carry
+        h = layers.rms_norm(x, blk["ln"], cfg.norm_eps)
+        y, st = ssm.mamba2_forward(blk["mixer"], cfg, h)
+        out = st if collect_cache else None
+        return pspec.constrain(x + y, "batch", "seq", "embed"), out
+
+    mamba_body = _maybe_remat(mamba_body, *remat)
+
+    if not every:
+        x, seeds = jax.lax.scan(mamba_body, x, blocks)
+        return x, jnp.float32(0.0), {"mamba": seeds}
+
+    shared = params["shared"]
+    n_groups = l // every
+    rem = l - n_groups * every
+    tree_take = lambda t, a, b_: jax.tree.map(lambda v: v[a:b_], t)
+    grouped = jax.tree.map(
+        lambda v: v[:n_groups * every].reshape((n_groups, every)
+                                               + v.shape[1:]), blocks)
+    attn_seeds = []
+    mamba_seeds = []
+
+    def shared_attn(x):
+        h = layers.rms_norm(x, shared["ln_a"], cfg.norm_eps)
+        a, kv = attention.gqa_forward(shared["attn"], cfg, h, positions,
+                                      q_chunk=q_chunk)
+        x = x + a
+        h = layers.rms_norm(x, shared["ln_f"], cfg.norm_eps)
+        return x + layers.swiglu(shared["ffn"], h), kv
+
+    def group_body(carry, grp):
+        x = carry
+        x, seeds = jax.lax.scan(mamba_body, x, grp)
+        x, kv = shared_attn(x)
+        return x, (seeds, kv)
+
+    x, (m_seeds, a_seeds) = jax.lax.scan(group_body, x, grouped)
+    if rem:
+        tail = tree_take(blocks, n_groups * every, l)
+        x, t_seeds = jax.lax.scan(mamba_body, x, tail)
+    else:
+        t_seeds = None
+    seeds = {"mamba_groups": m_seeds, "attn": a_seeds, "mamba_tail": t_seeds}
+    return x, jnp.float32(0.0), seeds
+
+
+def _rwkv_stack(cfg, params, x, remat, collect_cache, chunked):
+    blocks = params["blocks"]
+
+    def body(carry, blk):
+        x = carry
+        h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        y, st = ssm.rwkv6_time_mix(blk["tm"], cfg, h, chunked=chunked)
+        x = x + y
+        h = layers.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        y, last_cm = ssm.rwkv6_channel_mix(blk["cm"], cfg, h)
+        x = pspec.constrain(x + y, "batch", "seq", "embed")
+        out = (st, last_cm) if collect_cache else None
+        return x, out
+
+    body = _maybe_remat(body, remat)
+    x, seeds = jax.lax.scan(body, x, blocks)
+    return x, jnp.float32(0.0), seeds

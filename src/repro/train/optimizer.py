@@ -1,0 +1,102 @@
+"""Pure-JAX AdamW with f32 master weights, global-norm clipping and a
+warmup-stable-decay schedule.  (No optax in this environment — the optimizer
+is part of the substrate, per the assignment.)
+
+State layout (all f32, sharded like the params by the launcher):
+    {"master": params_f32, "m": ..., "v": ..., "count": int32}
+
+``update`` returns the new *compute* params in the model dtype — the classic
+mixed-precision arrangement (bf16 matmuls, f32 accumulation/update), which is
+also what the dry-run memory accounting assumes (14 bytes/param).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # dtype for the m/v moments.  bf16 moments are the standard memory
+    # lever for 100B+ models (master weights always stay f32).
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Any, moment_dtype="float32") -> dict:
+    md = jnp.dtype(moment_dtype)
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: dict,
+           compute_dtype) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (new_compute_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    md = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        step_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        p_new = p - lr * (step_ + cfg.weight_decay * p)
+        return m_new.astype(md), v_new.astype(md), p_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(state["master"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = tdef.unflatten([o[0] for o in out])
+    new_v = tdef.unflatten([o[1] for o in out])
+    new_master = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(compute_dtype), new_master)
+    new_state = {"master": new_master, "m": new_m, "v": new_v,
+                 "count": count}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

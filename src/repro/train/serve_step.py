@@ -1,0 +1,28 @@
+"""Serve step: batched single-token decode (greedy or temperature sampling).
+
+``make_serve_step(cfg)`` returns ``(params, cache, tokens, key) ->
+(next_tokens, logits, cache)`` — the exact computation the ``decode_32k`` /
+``long_500k`` dry-run cells lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step
+
+
+def make_serve_step(cfg: ModelConfig, *, temperature: float = 0.0):
+    def serve_step(params: dict, cache: dict, tokens: jax.Array,
+                   key: Optional[jax.Array] = None):
+        logits, cache = decode_step(cfg, params, cache, tokens)
+        if temperature <= 0.0 or key is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        return nxt, logits, cache
+
+    return serve_step

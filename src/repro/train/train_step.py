@@ -1,0 +1,88 @@
+"""Train step: loss, grads, microbatch accumulation, remat policy.
+
+``make_train_step(cfg, opt_cfg, n_microbatches, remat)`` returns a pure
+function ``(state, batch) -> (state, metrics)`` ready for ``jax.jit`` with
+shardings.  Microbatching runs as a ``lax.scan`` over gradient accumulation
+slices — the standard memory/throughput lever for the big dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, layers
+from . import optimizer
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            media: Optional[jax.Array] = None, *, remat: bool = False,
+            remat_policy: str = "", rwkv_chunked: bool = False):
+    """Next-token CE (+ MoE aux).  tokens [B, S]."""
+    logits, aux, _ = forward(cfg, params, tokens, media, remat=remat,
+                             remat_policy=remat_policy,
+                             rwkv_chunked=rwkv_chunked)
+    ce = layers.cross_entropy(logits[:, :-1, :], tokens[:, 1:])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: optimizer.AdamWConfig = optimizer.AdamWConfig(),
+                    *, n_microbatches: int = 1, remat: bool = False,
+                    remat_policy: str = "", rwkv_chunked: bool = False):
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def grads_of(params, tokens, media):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, media, remat=remat,
+                              remat_policy=remat_policy,
+                              rwkv_chunked=rwkv_chunked),
+            has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        tokens = batch["tokens"]
+        media = batch.get("media")
+
+        if n_microbatches == 1:
+            loss, metrics, grads = grads_of(params, tokens, media)
+        else:
+            b = tokens.shape[0]
+            mb = b // n_microbatches
+            tok_mb = tokens.reshape(n_microbatches, mb, *tokens.shape[1:])
+            med_mb = (media.reshape(n_microbatches, mb, *media.shape[1:])
+                      if media is not None else None)
+
+            def acc(carry, xs):
+                g_acc, l_acc = carry
+                t = xs[0]
+                m = xs[1] if media is not None else None
+                loss, _, grads = grads_of(params, t, m)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            xs = (tok_mb, med_mb) if media is not None else (tok_mb,)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.float32(0)), xs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = {"ce": loss, "aux": jnp.float32(0)}
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            opt_cfg, grads, state["opt"], compute_dtype)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, params: dict,
+                     opt_cfg: optimizer.AdamWConfig =
+                     optimizer.AdamWConfig()) -> dict:
+    return {"params": params,
+            "opt": optimizer.init(params, opt_cfg.moment_dtype)}

@@ -1,0 +1,313 @@
+"""Loop-aware cost extraction from optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation **once**, so a
+scan-over-layers model under-reports FLOPs by ~n_layers and collectives
+inside the loop are counted once.  This module re-derives loop-aware,
+per-device costs directly from ``compiled.as_text()``:
+
+1. parse computations + instructions (shapes, opcodes, operands),
+2. build the call graph (while bodies/conditions, fusions, calls,
+   conditionals),
+3. extract while trip counts from the loop-condition ``compare(iter,
+   constant)`` pattern,
+4. propagate multipliers: cost(computation) × Π trip-counts of enclosing
+   loops,
+5. aggregate:
+     * flops            — 2·M·N·K per ``dot`` (+ batch dims), anywhere,
+     * hbm_bytes        — Σ operand+output bytes of top-level *memory-
+                          moving* ops (fusion, dot, copy, slices,
+                          collectives); fused subcomputations excluded,
+     * collective_bytes — per-device link traffic with a ring model:
+                          all-reduce 2·in, all-gather out, reduce-scatter
+                          in, all-to-all in, collective-permute in,
+     * per-collective-op breakdown for §Perf drill-downs.
+
+Shapes in post-SPMD text are already per-device, so every number reported
+here is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# opcode = first bare word directly followed by "(" after the type (types
+# may be tuples with /*index=N*/ comments, so no assumptions about "=")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|true_computation|false_computation|"
+    r"branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+# Ops that genuinely move HBM bytes on TPU.  Pure-layout ops (reshape,
+# broadcast, transpose, iota, pad, slice, concatenate) and elementwise
+# chains fuse on TPU, so the CPU backend's standalone instances are
+# excluded -- see EXPERIMENTS.md §Roofline "methodology".
+_MEM_OPS = ("fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
+            "reduce", "scatter", "gather", "select-and-scatter",
+            "convolution") + COLLECTIVE_OPS
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[list[int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append([int(d) for d in dims.split(",")] if dims else [])
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_fused: bool = False
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("{" in line):
+            cur = Computation(hdr.group(1), [])
+            comps[cur.name] = cur
+            if "fused_computation" in cur.name:
+                cur.is_fused = True
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2).strip(),
+                                    m.group(3), line))
+    return comps
+
+
+def _called_comps(line: str) -> list[str]:
+    out = []
+    for m in _CALL_ATTR_RE.finditer(line):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+def _operand_names(line: str) -> list[str]:
+    """Operand instruction names: the %refs inside the first paren group."""
+    try:
+        args = line.split("(", 1)[1]
+        args = args.split(")", 1)[0]
+    except IndexError:
+        return []
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _dot_flops(line: str, out_type: str,
+               table: Dict[str, str]) -> float:
+    """2 × prod(output dims) × prod(contracting dims)."""
+    out_dims = _shape_dims(out_type)
+    out_n = math.prod(out_dims[0]) if out_dims else 0
+    opnds = _operand_names(line)
+    lhs_type = table.get(opnds[0], "") if opnds else ""
+    lhs_dims = _shape_dims(lhs_type)
+    lhs = lhs_dims[0] if lhs_dims else []
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if not lhs or mc is None:
+        k = lhs[-1] if lhs else 1
+        return 2.0 * out_n * k
+    k = 1
+    for d in mc.group(1).split(","):
+        if d != "":
+            k *= lhs[int(d)]
+    return 2.0 * out_n * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count heuristic: the max s32 constant in the loop condition."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_RE.finditer(ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    # drill-down: (total_bytes, mult, opcode, out_type, metadata-op-name)
+    top_collectives: list = dataclasses.field(default_factory=list)
+    top_memory: list = dataclasses.field(default_factory=list)
+
+    def finalize(self, keep: int = 20):
+        self.top_collectives = sorted(self.top_collectives,
+                                      reverse=True)[:keep]
+        self.top_memory = sorted(self.top_memory, reverse=True)[:keep]
+        return self
+
+
+def analyze(text: str) -> HloCost:
+    comps = parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: computation named main*
+        for name in comps:
+            if name.startswith("main"):
+                entry = name
+                break
+    # build weighted call edges, then propagate multipliers in topo order
+    edges: Dict[str, list] = {name: [] for name in comps}
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = 1
+                mcond = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                mbody = re.search(r"body=%?([\w.\-]+)", ins.line)
+                if mcond and mcond.group(1) in comps:
+                    trip = _trip_count(comps[mcond.group(1)])
+                    edges[cname].append((mcond.group(1), trip + 1))
+                if mbody and mbody.group(1) in comps:
+                    edges[cname].append((mbody.group(1), trip))
+            else:
+                for cn in _called_comps(ins.line):
+                    if cn in comps:
+                        edges[cname].append((cn, 1))
+
+    # topological order via DFS from entry (HLO call graph is a DAG)
+    topo: list[str] = []
+    state: Dict[str, int] = {}
+
+    def visit(n: str):
+        stack = [(n, 0)]
+        while stack:
+            node, i = stack.pop()
+            if i == 0:
+                if state.get(node, 0):
+                    continue
+                state[node] = 1
+            kids = edges.get(node, [])
+            if i < len(kids):
+                stack.append((node, i + 1))
+                kid = kids[i][0]
+                if state.get(kid, 0) == 0:
+                    stack.append((kid, 0))
+            else:
+                state[node] = 2
+                topo.append(node)
+
+    visit(entry)
+    topo.reverse()  # callers before callees
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for cname in topo:
+        m = mult[cname]
+        if m == 0.0:
+            continue
+        for cn, w in edges.get(cname, []):
+            mult[cn] += m * w
+
+    cost = HloCost()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        inside_fusion = comp.is_fused
+        table = {ins.name: ins.out_type for ins in comp.instrs}
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                cost.flops += m * _dot_flops(ins.line, ins.out_type, table)
+            if inside_fusion:
+                continue
+            in_b = sum(shape_bytes(table.get(o, ""))
+                       for o in _operand_names(ins.line))
+            out_b = shape_bytes(ins.out_type)
+            if ins.opcode in _MEM_OPS:
+                if ins.opcode == "dynamic-update-slice":
+                    # in-place on TPU: only the update slice moves
+                    upd = _operand_names(ins.line)
+                    upd_b = shape_bytes(table.get(upd[1], "")) \
+                        if len(upd) > 1 else out_b
+                    moved = 2.0 * upd_b
+                elif ins.opcode == "dynamic-slice":
+                    moved = 2.0 * out_b
+                elif ins.opcode == "fusion" and \
+                        "dynamic_update_slice" in ins.line:
+                    # DUS-rooted fusion: in-place update; count the inputs
+                    # except the big aliased buffer (first operand)
+                    ops_n = _operand_names(ins.line)
+                    rest = sum(shape_bytes(table.get(o, ""))
+                               for o in ops_n[1:])
+                    moved = 2.0 * rest if rest else out_b + in_b
+                else:
+                    moved = out_b + in_b
+                cost.hbm_bytes += m * moved
+                mo = re.search(r'op_name="([^"]*)"', ins.line)
+                cost.top_memory.append(
+                    (m * moved, m, ins.opcode, ins.out_type[:60],
+                     mo.group(1)[-80:] if mo else ""))
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            for cop in COLLECTIVE_OPS:
+                if base == cop and not ins.opcode.endswith("-done"):
+                    if cop == "all-reduce":
+                        traffic = 2.0 * in_b
+                    elif cop == "all-gather":
+                        traffic = out_b
+                    else:
+                        traffic = in_b
+                    cost.collective_bytes += m * traffic
+                    cost.collectives[cop] += m * traffic
+                    cost.collective_counts[cop] += int(m)
+                    mo = re.search(r'op_name="([^"]*)"', ins.line)
+                    cost.top_collectives.append(
+                        (m * traffic, m, cop, ins.out_type[:60],
+                         mo.group(1)[-80:] if mo else ""))
+    return cost.finalize()

@@ -1,0 +1,132 @@
+"""EXPERIMENTS.md table generator.
+
+Reads experiments/dryrun_{single,multi}.json (+ perf_iterations.json) and
+emits the §Dry-run / §Roofline markdown tables.  MODEL_FLOPS is recomputed
+from the current configs (6·N_active·D for train, 2·N_active·D forward) so
+formula fixes don't require re-compiling the sweep; the HLO-derived terms
+come from the stored analysis.
+
+Usage: PYTHONPATH=src python -m repro.utils.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.utils import roofline as roof
+
+
+def model_flops_of(arch: str, shape_name: str) -> float:
+    cfg = configs.get(arch)
+    sh = SHAPES[shape_name]
+    n_tokens = sh.global_batch * sh.seq_len if sh.kind != "decode" \
+        else sh.global_batch
+    n = cfg.n_active_params()
+    return (6.0 if sh.kind == "train" else 2.0) * n * n_tokens
+
+
+def derive(rec: dict) -> dict:
+    """Recompute roofline columns from stored per-chip HLO numbers."""
+    h = rec.get("hlo")
+    if not h:
+        return {}
+    chips = rec["chips"]
+    c = h["flops_per_chip"] / roof.PEAK_FLOPS
+    m = h["hbm_bytes_per_chip"] / roof.HBM_BW
+    k = h["collective_bytes_per_chip"] / roof.LINK_BW
+    step = max(c, m, k, 1e-12)
+    dom = {c: "compute", m: "memory", k: "collective"}[max(c, m, k)]
+    if rec["arch"] == "tdr-graph":
+        mf = rec.get("roofline", {}).get("model_flops", 0.0)
+    else:
+        mf = model_flops_of(rec["arch"], rec["shape"])
+    return {
+        "compute_s": c, "memory_s": m, "collective_s": k, "dominant": dom,
+        "model_flops": mf,
+        "ratio": mf / max(h["flops_per_chip"] * chips, 1.0),
+        "mfu": mf / (chips * roof.PEAK_FLOPS * step),
+        "step_s": step,
+    }
+
+
+def dryrun_table(results: list) -> str:
+    out = ["| arch | shape | mesh | chips | compile s | peak GB/chip | "
+           "HLO GFLOP/chip | HBM GB/chip | coll GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                       f"SKIP ({r['skipped']}) | — | — | — | — |")
+            continue
+        h = r.get("hlo", {})
+        mem = r["memory"]
+        peak = mem.get("peak_gb", mem.get("temp_gb", 0)
+                       + mem.get("argument_gb", 0))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r.get('compile_s', '—')} | {peak:.1f} | "
+            f"{h.get('flops_per_chip', 0) / 1e9:.0f} | "
+            f"{h.get('hbm_bytes_per_chip', 0) / 1e9:.0f} | "
+            f"{h.get('collective_bytes_per_chip', 0) / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(results: list) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS | useful ratio | roofline MFU |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if "skipped" in r or not r.get("hlo"):
+            continue
+        d = derive(r)
+        if r["arch"] == "tdr-graph":
+            # OR-semiring work doesn't register as HLO dots; ratio/MFU
+            # are not meaningful for the engine cell
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {d['compute_s']:.3f} | "
+                f"{d['memory_s']:.3f} | {d['collective_s']:.3f} | "
+                f"**{d['dominant']}** | {d['model_flops']:.2e} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {d['compute_s']:.3f} | "
+            f"{d['memory_s']:.3f} | {d['collective_s']:.3f} | "
+            f"**{d['dominant']}** | {d['model_flops']:.2e} | "
+            f"{d['ratio']:.2f} | {d['mfu']:.4f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    single = json.load(open("experiments/dryrun_single.json"))["results"]
+    try:
+        multi = json.load(open("experiments/dryrun_multi.json"))["results"]
+    except FileNotFoundError:
+        multi = []
+    print("## Dry-run (single-pod 16×16 = 256 chips)\n")
+    print(dryrun_table(single))
+    print("\n## Dry-run (multi-pod 2×16×16 = 512 chips)\n")
+    print(dryrun_table(multi))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(single))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(multi))
+    try:
+        perf = json.load(open("experiments/perf_iterations.json"))
+        print("\n## Perf iterations\n")
+        out = ["| iteration | compute s | memory s | collective s | "
+               "dominant | MFU |", "|---|---|---|---|---|---|"]
+        for name, rec in perf["iterations"].items():
+            d = derive(rec) if rec.get("hlo") and rec.get("arch") else \
+                rec.get("roofline", {})
+            out.append(f"| {name} | {d.get('compute_s', 0):.3f} | "
+                       f"{d.get('memory_s', 0):.3f} | "
+                       f"{d.get('collective_s', 0):.3f} | "
+                       f"{d.get('dominant')} | {d.get('mfu', 0):.4f} |")
+        print("\n".join(out))
+    except FileNotFoundError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

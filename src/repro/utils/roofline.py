@@ -1,0 +1,67 @@
+"""Three-term roofline model for TPU v5e.
+
+    compute_s    = per_chip_FLOPs   / 197e12      (bf16 MXU peak)
+    memory_s     = per_chip_bytes   / 819e9       (HBM bandwidth)
+    collective_s = per_chip_link_B  / 50e9        (one ICI link; the ring
+                   traffic model in utils/hlo.py already reduces each
+                   collective to per-chip link bytes)
+
+All inputs come from the loop-aware HLO analysis of the compiled dry-run
+(per-device shapes), so every term is per-chip seconds for one step.
+``model_flops_ratio`` = MODEL_FLOPS / HLO_FLOPs measures how much compiled
+compute is "useful" (remat/dispatch/recompute waste shows up here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .hlo import HloCost
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float
+    model_flops_ratio: float
+    dominant: str
+    step_s: float            # max of the three terms (perfect overlap)
+    mfu: float               # model_flops / (chips · peak · step_s)
+
+    @staticmethod
+    def from_cost(cost: HloCost, *, chips: int, model_flops: float
+                  ) -> "Roofline":
+        c = cost.flops / PEAK_FLOPS
+        m = cost.hbm_bytes / HBM_BW
+        k = cost.collective_bytes / LINK_BW
+        step = max(c, m, k, 1e-12)
+        dom = {c: "compute", m: "memory", k: "collective"}[max(c, m, k)]
+        ratio = model_flops / max(cost.flops * chips, 1.0)
+        return Roofline(
+            compute_s=c, memory_s=m, collective_s=k,
+            flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+            collective_bytes=cost.collective_bytes,
+            model_flops=model_flops, model_flops_ratio=ratio,
+            dominant=dom, step_s=step,
+            mfu=model_flops / (chips * PEAK_FLOPS * step))
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_train(n_params_active: int, n_tokens: int) -> float:
+    """6·N·D (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def model_flops_forward(n_params_active: int, n_tokens: int) -> float:
+    return 2.0 * n_params_active * n_tokens

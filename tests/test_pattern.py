@@ -1,0 +1,73 @@
+"""Pattern AST / parser / DNF compiler tests (+ hypothesis properties)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import pattern as pat
+
+
+def test_parse_basic():
+    p = pat.parse("l0 & !(l1 | l2)")
+    assert pat.evaluate(p, frozenset({0})) is True
+    assert pat.evaluate(p, frozenset({0, 1})) is False
+    assert pat.evaluate(p, frozenset()) is False
+
+
+def test_parse_words():
+    p = pat.parse("0 AND NOT (1 OR 2)")
+    q = pat.parse("l0 & !(l1 | l2)")
+    for bits in range(8):
+        present = frozenset(i for i in range(3) if bits & (1 << i))
+        assert pat.evaluate(p, present) == pat.evaluate(q, present)
+
+
+def test_parse_errors():
+    with pytest.raises(ValueError):
+        pat.parse("l0 &")
+    with pytest.raises(ValueError):
+        pat.parse("(l0")
+
+
+def test_dnf_simple():
+    terms = pat.to_dnf(pat.parse("l0 & l1"))
+    assert len(terms) == 1
+    assert terms[0].require == frozenset({0, 1})
+    assert terms[0].forbid == frozenset()
+
+
+def test_dnf_not_of_and():
+    # ¬(a ∧ b) = ¬a ∨ ¬b
+    terms = pat.to_dnf(pat.parse("!(l0 & l1)"))
+    assert len(terms) == 2
+    assert all(not t.require for t in terms)
+
+
+def test_dnf_drops_contradictions():
+    terms = pat.to_dnf(pat.parse("l0 & !l0"))
+    assert terms == []
+
+
+def test_lcr_pattern():
+    p = pat.lcr([0, 2], 4)           # allowed {0,2} of 4 labels
+    assert pat.evaluate(p, frozenset({0, 2})) is True
+    assert pat.evaluate(p, frozenset({0, 1})) is False
+
+
+# ------------------------------------------------------------ hypothesis
+@st.composite
+def patterns(draw, depth=0):
+    if depth > 3 or draw(st.booleans()):
+        lbl = pat.Label(draw(st.integers(0, 4)))
+        return pat.Not(lbl) if draw(st.booleans()) else lbl
+    kind = draw(st.sampled_from(["and", "or", "not"]))
+    if kind == "not":
+        return pat.Not(draw(patterns(depth=depth + 1)))
+    kids = draw(st.lists(patterns(depth=depth + 1), min_size=1, max_size=3))
+    return (pat.And if kind == "and" else pat.Or)(tuple(kids))
+
+
+@hp.given(patterns())
+@hp.settings(max_examples=100, deadline=None)
+def test_dnf_equivalent_to_pattern(p):
+    terms = pat.to_dnf(p)
+    assert pat.dnf_equivalent(p, terms, 5)

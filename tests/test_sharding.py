@@ -1,0 +1,110 @@
+"""Sharding rules + small-mesh lowering (the 1-device analogue of the
+512-device dry-run; the full meshes are exercised by launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.launch import sharding
+from repro.models import init_params, pspec
+from repro.models import model as model_lib
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+
+def tiny_mesh():
+    return Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", C.list_archs())
+def test_param_specs_cover_tree(arch):
+    cfg = C.get(arch)
+    mesh = tiny_mesh()
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = sharding.param_specs(cfg, shapes, mesh)
+    flat_s, tdef_s = jax.tree.flatten(specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+    flat_p, tdef_p = jax.tree.flatten(shapes)
+    assert tdef_s == tdef_p
+    for spec, leaf in zip(flat_s, flat_p):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim
+        # big matrices must actually be sharded somewhere
+        if leaf.size > 4_000_000:
+            assert any(a is not None for a in spec), (arch, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "dbrx-132b",
+                                  "zamba2-1.2b", "rwkv6-3b"])
+def test_train_step_lowers_on_mesh(arch):
+    """Reduced config, 1x1 mesh: same code path as the 512-chip dry-run."""
+    cfg = C.get(arch).reduced()
+    mesh = tiny_mesh()
+    params_shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                                  jax.random.PRNGKey(0))
+    state_shape = jax.eval_shape(
+        lambda k: init_train_state(cfg, init_params(cfg, k)),
+        jax.random.PRNGKey(0))
+    specs = sharding.state_specs(cfg, state_shape, mesh)
+    sds = sharding.sds_with_sharding(state_shape,
+                                     sharding.to_named(specs, mesh))
+    toks = jax.ShapeDtypeStruct(
+        (4, 32), jnp.int32,
+        sharding=NamedSharding(mesh, P(("data",), None)))
+    batch = {"tokens": toks}
+    if cfg.n_media_tokens:
+        batch["media"] = jax.ShapeDtypeStruct(
+            (4, cfg.n_media_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(("data",), None, None)))
+    step = make_train_step(cfg, AdamWConfig(), n_microbatches=2)
+    with pspec.use_mesh(mesh, pspec.default_mapping(False)), mesh:
+        lowered = jax.jit(step, donate_argnums=0).lower(sds, batch)
+        compiled = lowered.compile()
+    assert compiled.memory_analysis() is not None
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "deepseek-v2-236b",
+                                  "rwkv6-3b"])
+def test_decode_lowers_on_mesh(arch):
+    cfg = C.get(arch).reduced()
+    mesh = tiny_mesh()
+    params_shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                                  jax.random.PRNGKey(0))
+    p_specs = sharding.param_specs(cfg, params_shape, mesh)
+    p_sds = sharding.sds_with_sharding(params_shape,
+                                       sharding.to_named(p_specs, mesh))
+    cache_shape = jax.eval_shape(lambda: model_lib.init_cache(cfg, 4, 64))
+    c_specs = sharding.cache_specs(cfg, cache_shape, mesh, 4)
+    c_sds = sharding.sds_with_sharding(cache_shape,
+                                       sharding.to_named(c_specs, mesh))
+    toks = jax.ShapeDtypeStruct((4,), jnp.int32,
+                                sharding=NamedSharding(mesh, P(("data",))))
+
+    def fn(params, cache, tokens):
+        return model_lib.decode_step(cfg, params, cache, tokens)
+
+    with pspec.use_mesh(mesh, pspec.default_mapping(False)), mesh:
+        compiled = jax.jit(fn, donate_argnums=1).lower(
+            p_sds, c_sds, toks).compile()
+    assert compiled is not None
+
+
+def test_pspec_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert pspec.constrain(x, "batch", None) is x
+
+
+def test_pspec_divisibility_guard():
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    with pspec.use_mesh(mesh, {"heads": "model"}):
+        x = jnp.ones((3, 5))
+        y = pspec.constrain(x, "heads", None)   # 3 % 1 == 0 -> fine
+        assert y.shape == x.shape
+
+
+def test_mesh_factory_requires_devices():
+    from repro.launch import mesh as mesh_lib
+    with pytest.raises(RuntimeError):
+        mesh_lib.make_production_mesh()   # 1 CPU device < 256

@@ -82,10 +82,11 @@ def time_call(fn: Callable, *args, repeat: int = 1, **kw):
     return out, best
 
 
-def time_tdr(idx, qs: QuerySet, repeat: int = 2):
-    """TDR batch answering time (jit warm on first repeat)."""
+def time_tdr(idx, qs: QuerySet, repeat: int = 2, backend: str | None = None):
+    """TDR batch answering time (jit warm on first repeat); ``backend``
+    selects the packed-word engine backend (None = engine default)."""
     ans, sec = time_call(tdr_query.answer_batch, idx, qs.queries,
-                         repeat=repeat)
+                         repeat=repeat, backend=backend)
     correct = ans.tolist() == qs.truth
     return sec, correct
 

@@ -1,27 +1,49 @@
-"""Kernel micro-benchmarks: frontier_step lowering paths (ref vs mxu) and
-the fused way-filter — CPU wall-time (structural; TPU numbers come from the
-dry-run roofline)."""
+"""Kernel micro-benchmarks: one OR-semiring propagate round per lowering —
+the pure-jnp oracle (ref), the MXU unpack-matmul (mxu), the Pallas kernel
+(interpret off-TPU / real on TPU), and the packed segment reduction the
+``segment`` engine backend uses.  CPU wall-time is structural; TPU numbers
+come from the dry-run roofline (see ARCHITECTURE.md)."""
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import bitset
+from repro.core import bitset, engine as engine_mod
 from repro.kernels import ops
 from . import common
 
+# engine backend -> frontier_step lowering it exercises on this host
+_BACKEND_MODES = {
+    "segment": ("segment",),
+    "pallas": ("pallas",) if jax.default_backend() == "tpu"
+    else ("interpret",),
+}
 
-def run(scale: str = "smoke", seed: int = 0) -> list:
+
+def run(scale: str = "smoke", seed: int = 0,
+        backend: str | None = None) -> list:
     rng = np.random.default_rng(seed)
     n = {"smoke": 512, "small": 2048, "full": 8192}[scale]
     a = rng.random((n, n)) < (8.0 / n)
     ap = jnp.asarray(bitset.pack_bits_np(a))
     x = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, 8), dtype=np.uint32))
+    # same adjacency as an edge list, for the segment-backend round
+    src, dst = np.nonzero(a)
+    srcj, dstj = jnp.asarray(src), jnp.asarray(dst)
+
+    modes = (_BACKEND_MODES[engine_mod.resolve_backend(backend)]
+             if backend else ("ref", "mxu", "interpret", "segment"))
     rows = []
-    for mode in ("ref", "mxu"):
-        (_, sec) = common.time_call(
-            lambda: np.asarray(ops.frontier_step(ap, x, mode=mode)),
-            repeat=3)
+    for mode in modes:
+        if mode == "segment":
+            def call():
+                return np.asarray(bitset.segment_or_words(
+                    x[dstj], srcj, num_segments=n, chunk_words=2))
+        else:
+            def call(mode=mode):
+                return np.asarray(ops.frontier_step(ap, x, mode=mode))
+        (_, sec) = common.time_call(call, repeat=3)
         rows.append((f"kernels/frontier_step/{mode}/V{n}",
                      round(sec * 1e6, 1), "per_round"))
     return rows

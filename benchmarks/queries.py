@@ -1,4 +1,9 @@
-"""Paper Table III: AND-/OR-/NOT-query time, TDR vs DFS, true & false sets."""
+"""Paper Table III: AND-/OR-/NOT-query time, TDR vs DFS, true & false sets.
+
+``backend`` sweeps the packed-word engine ("segment" / "pallas"); the
+harness (``run.py --backends``) records one row set per backend so the
+perf trajectory of the engine refactor is tracked in BENCH_queries.json.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -7,19 +12,21 @@ from repro.core import graph as G, tdr_build
 from . import common
 
 
-def run(scale: str = "smoke", seed: int = 0) -> list:
+def run(scale: str = "smoke", seed: int = 0,
+        backend: str | None = None) -> list:
     sc = common.SCALES[scale]
     rows = []
     for kind in ("er", "pa"):
         g = G.random_graph(kind, sc["v"], 4.0, 8, seed=seed)
-        idx = tdr_build.build_index(g, tdr_build.TDRConfig())
+        idx = tdr_build.build_index(g, tdr_build.TDRConfig(),
+                                    backend=backend)
         sets = common.make_query_sets(g, sc["queries"], 2, seed=seed)
         for fam in ("AND", "OR", "NOT"):
             for tf in ("true", "false"):
                 qs = sets[f"{fam}-{tf}"]
                 if not qs.queries:
                     continue
-                tdr_s, ok = common.time_tdr(idx, qs)
+                tdr_s, ok = common.time_tdr(idx, qs, backend=backend)
                 dfs_s, _ = common.time_dfs(g, qs)
                 n = len(qs.queries)
                 rows.append((f"tableIII/{kind}/{fam}-{tf}",

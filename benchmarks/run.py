@@ -1,12 +1,23 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--scale smoke|small|full]``
-prints ``name,us_per_call,derived`` CSV rows (paper-table mapping in
-DESIGN.md §6; roofline terms come from launch/dryrun.py, not from here).
+prints ``name,us_per_call,derived`` CSV rows (paper-table mapping and the
+engine layering live in ARCHITECTURE.md; roofline terms come from
+launch/dryrun.py, not from here).
+
+``--backends segment,pallas`` sweeps the packed-word engine backends for
+the modules that support it (queries, kernels); ``--json PATH`` addition-
+ally writes machine-readable per-row records
+``{name, us_per_call, derived, backend, scale}`` so the perf trajectory is
+tracked across PRs (see BENCH_queries.json at the repo root).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+
+from repro.core import engine as engine_mod
 
 from . import (common, index_cost, kernels_bench, lcr_bench, queries,
                scalability, synthetic_sweeps)
@@ -21,23 +32,63 @@ MODULES = [
 ]
 
 
+def collect(scale: str, only: str = "", backends: list | None = None) -> list:
+    """Run the selected modules; returns records (dicts, one per CSV row).
+
+    ``only`` is a comma-separated list of substrings matched against the
+    module names; ``backends`` sweeps engine backends where supported.
+    """
+    tokens = [t for t in (only or "").split(",") if t]
+    records = []
+    for name, mod in MODULES:
+        if tokens and not any(t in name for t in tokens):
+            continue
+        supports = "backend" in inspect.signature(mod.run).parameters
+        sweep = (backends or [None]) if supports else [None]
+        for be in sweep:
+            label = be or engine_mod.resolve_backend("auto")
+            try:
+                kw = {"scale": scale}
+                if be is not None:
+                    kw["backend"] = be
+                rows = mod.run(**kw)
+            except Exception as e:  # noqa
+                rows = [(f"{name}/ERROR", 0, repr(e)[:120])]
+            for row in rows:
+                records.append({
+                    "name": row[0],
+                    "us_per_call": row[1],
+                    "derived": row[2] if len(row) > 2 else "",
+                    "backend": label if supports else "n/a",
+                    "scale": scale,
+                })
+    return records
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="smoke",
                     choices=sorted(common.SCALES))
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substrings of module names")
+    ap.add_argument("--backends", default="",
+                    help="comma-separated engine backends to sweep "
+                         "(e.g. segment,pallas); default: engine default")
+    ap.add_argument("--json", default="",
+                    help="also write per-row JSON records to this path")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
-    for name, mod in MODULES:
-        if args.only and args.only not in name:
-            continue
-        try:
-            rows = mod.run(scale=args.scale)
-        except Exception as e:  # noqa
-            rows = [(f"{name}/ERROR", 0, repr(e)[:120])]
-        for row in rows:
-            print(",".join(str(x) for x in row), flush=True)
+    backends = [b for b in args.backends.split(",") if b] or None
+    records = collect(args.scale, args.only, backends)
+
+    print("name,us_per_call,backend,derived")
+    for r in records:
+        print(f"{r['name']},{r['us_per_call']},{r['backend']},{r['derived']}",
+              flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -8,18 +8,20 @@ Public API::
     idx = tdr_build.build_index(g, tdr_build.TDRConfig())
     ans = tdr_query.answer_batch(idx, [(u, v, pattern.parse("l0 & !l3"))])
 """
-from . import bitset, dfs_baseline, distributed, graph, lcr, pattern
+from . import bitset, dfs_baseline, distributed, engine, graph, lcr, pattern
 from . import tdr_build, tdr_query
+from .engine import Engine, EngineConfig, make_engine, resolve_backend
 from .graph import Graph, erdos_renyi, fig2_example, preferential_attachment
 from .pattern import parse, all_of, any_of, none_of, lcr as lcr_pattern
 from .tdr_build import TDRConfig, TDRIndex, build_index
-from .tdr_query import QueryStats, answer, answer_batch
+from .tdr_query import QueryPlan, QueryStats, answer, answer_batch
 
 __all__ = [
-    "Graph", "TDRConfig", "TDRIndex", "QueryStats",
+    "Graph", "TDRConfig", "TDRIndex", "QueryPlan", "QueryStats",
+    "Engine", "EngineConfig", "make_engine", "resolve_backend",
     "build_index", "answer", "answer_batch", "parse",
     "all_of", "any_of", "none_of", "lcr_pattern",
     "erdos_renyi", "preferential_attachment", "fig2_example",
-    "bitset", "dfs_baseline", "distributed", "graph", "lcr", "pattern",
-    "tdr_build", "tdr_query",
+    "bitset", "dfs_baseline", "distributed", "engine", "graph", "lcr",
+    "pattern", "tdr_build", "tdr_query",
 ]

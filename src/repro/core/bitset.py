@@ -1,10 +1,13 @@
 """Packed-bitset utilities.
 
 The TDR index stores Bloom-style summaries as packed ``uint32`` words (the
-storage/kernel layout) but most of the *build* math runs on boolean planes,
-word-chunked so transients stay small on 1-CPU containers.  On TPU the packed
-layout feeds ``repro.kernels.bitset_matmul`` directly (32 graph columns per
-lane element).
+storage/kernel layout).  Since the packed-word engine refactor the *build*
+and *query* math also runs end-to-end on packed words via
+``segment_or_words`` (word-chunked unpack transients only — no full-width
+boolean plane is ever materialized at rest).  On TPU the packed layout feeds
+``repro.kernels.bitset_matmul`` directly (32 graph columns per lane
+element).  ``segment_or`` (boolean-plane input) remains for the distributed
+exchange path in ``repro.core.distributed``.
 """
 from __future__ import annotations
 
@@ -80,6 +83,52 @@ def segment_or(values: jax.Array, segment_ids: jax.Array, *, num_segments: int,
     out = jax.lax.map(body, v)  # [nchunks, S, chunk]
     out = out.transpose(1, 0, 2).reshape(num_segments, nchunks * chunk)
     return out[:, :nbits].astype(jnp.bool_)
+
+
+def set_bits_np(words: np.ndarray, idx: tuple, positions: np.ndarray) -> None:
+    """``words[idx + (positions >> 5,)] |= 1 << (positions & 31)`` in place.
+
+    The one packed-word bit-scatter used to build hash rows, label planes,
+    and adjacency bit-matrices; ``idx`` is the tuple of leading index
+    arrays (may be empty for a flat word row)."""
+    pos = positions.astype(np.int64)
+    np.bitwise_or.at(words, tuple(idx) + (pos >> 5,),
+                     (np.int64(1) << (pos & 31)).astype(np.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "chunk_words"))
+def segment_or_words(values: jax.Array, segment_ids: jax.Array, *,
+                     num_segments: int, chunk_words: int = 2) -> jax.Array:
+    """OR-reduce packed uint32 rows ``[E, W]`` by segment -> ``[S, W]``.
+
+    Bitwise OR is not a ``segment_max`` on uint32 values, so the reduction
+    unpacks ``chunk_words`` words at a time, max-reduces the bit plane, and
+    repacks.  Operands stay packed at rest; the only transient is one
+    ``[E, chunk_words*32]`` uint8 plane per chunk.
+    """
+    e, w = values.shape
+    nchunks = -(-w // chunk_words)
+    pad = nchunks * chunk_words - w
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((e, pad), dtype=jnp.uint32)], axis=1)
+    v = values.reshape(e, nchunks, chunk_words).transpose(1, 0, 2)
+
+    def body(chunk):  # [E, chunk_words] uint32
+        bits = unpack_bits(chunk, chunk_words * WORD).astype(jnp.uint8)
+        red = jax.ops.segment_max(bits, segment_ids,
+                                  num_segments=num_segments)
+        return pack_bits(red.astype(jnp.bool_))
+
+    out = jax.lax.map(body, v)  # [nchunks, S, chunk_words]
+    out = out.transpose(1, 0, 2).reshape(num_segments, nchunks * chunk_words)
+    return out[:, :w]
+
+
+def or_reduce(words: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-OR reduction of packed words along ``axis``."""
+    return jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or,
+                          (axis % words.ndim,))
 
 
 def words_contain(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -15,7 +15,7 @@ Scaling posture (the multi-pod story for the paper's engine):
   (small) query batch, each device runs the filter cascade for queries
   whose source it owns, verdicts combine with a max-reduction.  The
   single-mesh engine (`tdr_query`) plus this module's closure fixpoint
-  carry the measured multi-pod story (EXPERIMENTS.md §Perf cell T).
+  carry the measured multi-pod story (ARCHITECTURE.md §Perf cell T).
 
 The same code runs on 1 CPU device in tests and on the 512-way fake-device
 mesh in the dry-run (see ``repro/launch/dryrun.py --arch tdr-graph``).

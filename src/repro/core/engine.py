@@ -1,0 +1,291 @@
+"""Packed-word OR-semiring closure engine — one core shared by build & query.
+
+Everything the TDR pipeline computes — index construction (§IV Alg. 1),
+vertical k-level propagation, and the query-side product-graph expansion
+(§V Alg. 2) — is one primitive applied in different shapes:
+
+    out[a] = OR_{(a,b) ∈ E} x[b]          (boolean-OR semiring propagate)
+
+This module provides that primitive **end-to-end on packed uint32 words**
+(32 graph bits per lane element; no ``[V, nbits]`` boolean plane at rest)
+behind a pluggable backend:
+
+* ``segment`` — reference backend; chunked ``segment_max`` over word-chunk
+  transients (``bitset.segment_or_words``).  Works on any jax backend and
+  any graph size; the default off-TPU.
+* ``pallas``  — routes every fixpoint round / frontier expansion through
+  ``repro.kernels.bitset_matmul`` on a packed adjacency bit-matrix
+  (``[V, ceil(V/32)]`` uint32, bit j of row i == edge i→j).  Real kernel on
+  TPU, interpret mode elsewhere.  Dense ``V×V/8`` bytes, so the engine
+  auto-falls back to ``segment`` above ``EngineConfig.max_dense_bytes``.
+
+Backend selection contract (see ARCHITECTURE.md):
+
+1. An explicitly requested backend ("segment" | "pallas") always wins.
+2. The ``REPRO_ENGINE_BACKEND`` environment variable replaces the default
+   resolution when the request is "auto"/unset.
+3. "auto" resolves to ``pallas`` on TPU, ``segment`` elsewhere.
+4. A ``pallas`` request that cannot be honoured (adjacency over the dense
+   cap) falls back to ``segment`` with a warning — never an error.
+
+Both backends are bit-exact (property-tested against each other and the
+bool-plane oracle in ``tests/test_engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitset
+from .graph import Graph
+
+ENV_BACKEND = "REPRO_ENGINE_BACKEND"
+BACKENDS = ("segment", "pallas")
+
+
+def resolve_backend(requested: str = "auto") -> str:
+    """Resolve a backend name per the selection contract above.
+
+    The ``REPRO_ENGINE_BACKEND`` environment variable replaces the
+    *default* ("auto"/empty) resolution only — an explicitly requested
+    backend wins, so backend sweeps and bit-equality comparisons cannot be
+    silently collapsed onto one backend by ambient environment."""
+    req = requested or "auto"
+    if req == "auto":
+        req = os.environ.get(ENV_BACKEND, "").strip() or "auto"
+    if req == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "segment"
+    if req not in BACKENDS:
+        raise ValueError(
+            f"unknown engine backend {req!r}; expected one of "
+            f"{('auto',) + BACKENDS}")
+    return req
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    backend: str = "auto"        # "auto" | "segment" | "pallas"
+    bit_chunk: int = 64          # transient chunk width (bits) for segment ORs
+    interpret: bool | None = None  # pallas interpret; None -> off-TPU only
+    max_dense_bytes: int = 1 << 28  # pallas dense-adjacency cap (auto-fallback)
+
+    @property
+    def chunk_words(self) -> int:
+        return max(1, self.bit_chunk // bitset.WORD)
+
+
+# ------------------------------------------------------- adjacency packing
+def pack_adjacency_np(graph: Graph, *, reverse: bool = False) -> np.ndarray:
+    """Packed adjacency bit-matrix uint32 ``[V, ceil(V/32)]``.
+
+    Forward: bit v of row u == edge u→v (the closure/propagate operand).
+    Reverse: bit u of row v == edge u→v.
+    """
+    v_n = graph.n_vertices
+    kw = bitset.n_words(v_n)
+    a = np.zeros((v_n, kw), dtype=np.uint32)
+    src, dst = graph.src, graph.indices
+    rows, cols = (dst, src) if reverse else (src, dst)
+    bitset.set_bits_np(a, (rows,), cols)
+    return a
+
+
+def pack_label_class_adjacency_np(graph: Graph, special_labels,
+                                  *, reverse: bool = True) -> np.ndarray:
+    """Per-label-class packed adjacency ``[C+1, V, ceil(V/32)]``.
+
+    One bit-matrix per *special* label (labels that some pending query
+    requires or forbids) plus a final **neutral** class OR-ing every edge
+    whose label is special for nobody — those edges behave identically for
+    all queries (always allowed, subset-bit 0), so one matmul covers them.
+    """
+    v_n = graph.n_vertices
+    kw = bitset.n_words(v_n)
+    special = list(special_labels)
+    out = np.zeros((len(special) + 1, v_n, kw), dtype=np.uint32)
+    src, dst = graph.src, graph.indices
+    rows, cols = (dst, src) if reverse else (src, dst)
+    cls = np.full(graph.n_edges, len(special), dtype=np.int64)
+    for i, l in enumerate(special):
+        cls[graph.labels == l] = i
+    bitset.set_bits_np(out, (cls, rows), cols)
+    return out
+
+
+# --------------------------------------------------------- jitted closures
+@functools.partial(jax.jit, static_argnames=("num_segments", "chunk_words",
+                                             "max_iters"))
+def _closure_segment(base: jax.Array, gather_idx: jax.Array,
+                     scatter_idx: jax.Array, *, num_segments: int,
+                     chunk_words: int, max_iters: int):
+    """lfp(R = base ∨ OR_{(a,b)} R[b]) via packed segment reductions."""
+
+    def round_(r):
+        upd = bitset.segment_or_words(r[gather_idx], scatter_idx,
+                                      num_segments=num_segments,
+                                      chunk_words=chunk_words)
+        return r | upd
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, _, it = state
+        nr = round_(r)
+        return nr, jnp.any(nr != r), it + 1
+
+    r, _, rounds = jax.lax.while_loop(cond, body,
+                                      (base, jnp.bool_(True), jnp.int32(0)))
+    return r, rounds
+
+
+def _matmul_rows(adj: jax.Array, x: jax.Array, mode: str) -> jax.Array:
+    """``OR_j adj[i,j] & x[j]`` with x's row count padded to adj's bit width
+    (the packed adjacency is word-aligned: K = ceil(V/32)*32 >= V)."""
+    from repro.kernels import ops  # deferred: kernels import repro.core
+    k = adj.shape[1] * bitset.WORD
+    if x.shape[0] < k:
+        x = jnp.concatenate(
+            [x, jnp.zeros((k - x.shape[0],) + x.shape[1:], x.dtype)], axis=0)
+    return ops.frontier_step(adj, x, mode=mode)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "mode"))
+def _closure_matmul(base: jax.Array, adj: jax.Array, *, max_iters: int,
+                    mode: str):
+    """Same fixpoint with rounds routed through ``kernels.bitset_matmul``."""
+
+    def round_(r):
+        return r | _matmul_rows(adj, r, mode)
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, _, it = state
+        nr = round_(r)
+        return nr, jnp.any(nr != r), it + 1
+
+    r, _, rounds = jax.lax.while_loop(cond, body,
+                                      (base, jnp.bool_(True), jnp.int32(0)))
+    return r, rounds
+
+
+# ------------------------------------------------------------------ engine
+class Engine:
+    """OR-semiring propagation over one graph, packed words in/out.
+
+    Holds the device-resident edge lists and (for the ``pallas`` backend)
+    the packed adjacency bit-matrices, so repeated build/query calls reuse
+    the same operands and jit caches.
+    """
+
+    def __init__(self, graph: Graph, config: EngineConfig = EngineConfig()):
+        backend = resolve_backend(config.backend)
+        kw = bitset.n_words(graph.n_vertices)
+        dense_bytes = graph.n_vertices * kw * 4
+        if backend == "pallas" and dense_bytes > config.max_dense_bytes:
+            warnings.warn(
+                f"engine: dense adjacency needs {dense_bytes/1e6:.0f} MB "
+                f"(> max_dense_bytes={config.max_dense_bytes/1e6:.0f} MB); "
+                "falling back to the segment backend", stacklevel=2)
+            backend = "segment"
+        self.graph = graph
+        self.config = config
+        self.backend = backend
+        self.interpret = (jax.default_backend() != "tpu"
+                          if config.interpret is None else config.interpret)
+        self.edge_src = jnp.asarray(graph.src)
+        self.edge_dst = jnp.asarray(graph.indices)
+        self._adj: dict[bool, jax.Array] = {}
+        self._label_adj: dict[tuple, jax.Array] = {}
+
+    # ------------------------------------------------------------ operands
+    @property
+    def matmul_mode(self) -> str:
+        """kernels.ops mode implementing this engine's matmul calls."""
+        return "interpret" if self.interpret else "pallas"
+
+    @property
+    def kernel_mode(self) -> str:
+        """kernels.ops mode for auxiliary fused kernels (way_filter &c.)."""
+        return self.matmul_mode if self.backend == "pallas" else "ref"
+
+    # distinct special-label sets whose class matrices stay resident; the
+    # per-set footprint is (C+1) dense adjacencies, so the cache is a small
+    # LRU rather than unbounded under varied query traffic
+    LABEL_ADJ_CACHE = 4
+
+    def can_pack_dense(self, n_matrices: int = 1) -> bool:
+        """Would ``n_matrices`` dense adjacency bit-matrices fit the cap?"""
+        kw = bitset.n_words(self.graph.n_vertices)
+        return (n_matrices * self.graph.n_vertices * kw * 4
+                <= self.config.max_dense_bytes)
+
+    def adjacency(self, *, reverse: bool = False) -> jax.Array:
+        """Cached packed adjacency bit-matrix ``[V, ceil(V/32)]``."""
+        if reverse not in self._adj:
+            self._adj[reverse] = jnp.asarray(
+                pack_adjacency_np(self.graph, reverse=reverse))
+        return self._adj[reverse]
+
+    def label_class_adjacency(self, special_labels) -> jax.Array:
+        """Per-label-class reverse adjacency ``[C+1, V, Kw]`` (LRU-cached)."""
+        key = tuple(sorted(set(int(l) for l in special_labels)))
+        if key in self._label_adj:
+            self._label_adj[key] = self._label_adj.pop(key)  # refresh LRU
+        else:
+            while len(self._label_adj) >= self.LABEL_ADJ_CACHE:
+                self._label_adj.pop(next(iter(self._label_adj)))
+            self._label_adj[key] = jnp.asarray(
+                pack_label_class_adjacency_np(self.graph, key, reverse=True))
+        return self._label_adj[key]
+
+    # ---------------------------------------------------------- primitives
+    def segment_or(self, values: jax.Array, segment_ids: jax.Array,
+                   num_segments: int) -> jax.Array:
+        """OR-reduce packed rows by arbitrary segment ids (projections)."""
+        return bitset.segment_or_words(values, segment_ids,
+                                       num_segments=num_segments,
+                                       chunk_words=self.config.chunk_words)
+
+    def propagate(self, x: jax.Array, *, reverse: bool = False) -> jax.Array:
+        """One semiring round: ``out[a] = OR_{(a,b)} x[b]`` (packed)."""
+        if self.backend == "pallas":
+            return _matmul_rows(self.adjacency(reverse=reverse), x,
+                                self.matmul_mode)
+        gather = self.edge_dst if not reverse else self.edge_src
+        scatter = self.edge_src if not reverse else self.edge_dst
+        return self.segment_or(x[gather], scatter, self.graph.n_vertices)
+
+    def closure(self, base: jax.Array, *, reverse: bool = False,
+                max_iters: int | None = None) -> tuple[jax.Array, int]:
+        """Least fixpoint ``R = base ∨ propagate(R)``; returns (R, rounds)."""
+        max_iters = max_iters or self.graph.n_vertices
+        if self.backend == "pallas":
+            return _closure_matmul(base, self.adjacency(reverse=reverse),
+                                   max_iters=max_iters,
+                                   mode=self.matmul_mode)
+        gather = self.edge_dst if not reverse else self.edge_src
+        scatter = self.edge_src if not reverse else self.edge_dst
+        return _closure_segment(base, gather, scatter,
+                                num_segments=self.graph.n_vertices,
+                                chunk_words=self.config.chunk_words,
+                                max_iters=max_iters)
+
+
+def make_engine(graph: Graph, backend: str | None = None,
+                config: EngineConfig | None = None) -> Engine:
+    """Engine factory: ``backend`` shorthand overrides ``config.backend``."""
+    cfg = config or EngineConfig()
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, backend=backend)
+    return Engine(graph, cfg)

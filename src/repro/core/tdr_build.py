@@ -7,9 +7,12 @@ fixpoint is computed *level-synchronously*:
     R ← R  ∨  (A ⊗ R)        (boolean-OR semiring, one round per level)
 
 which converges in ≤ diameter rounds and makes every round a dense batched
-OR-reduction — the shape TPUs (and ``repro.kernels.bitset_matmul``) want.
-The result is bit-identical to the DFS build: both compute the closure of the
-OR-recurrence ``R[u] = ⋁_{(u,v,l)∈E} (bit(v) ∨ R[v])``.
+OR-reduction.  All rounds run through ``repro.core.engine`` **on packed
+uint32 words end-to-end** — no ``[V, nbits]`` boolean plane is ever
+materialized — and, with the ``pallas`` backend, each round is one
+``repro.kernels.bitset_matmul`` call on the packed adjacency bit-matrix.
+The result is bit-identical to the DFS build: both compute the closure of
+the OR-recurrence ``R[u] = ⋁_{(u,v,l)∈E} (bit(v) ∨ R[v])``.
 
 Index anatomy (per vertex ``u``, ``G`` ways, ``k`` vertical levels):
 
@@ -29,7 +32,6 @@ plus an optional second multiplicative hash (Bloom double-hashing).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -37,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitset
+from . import engine as engine_mod
 from .graph import Graph
 
 
@@ -51,7 +54,7 @@ class TDRConfig:
     n_hashes: int = 2            # Bloom hashes per vertex
     hash_scheme: str = "dfs-block"   # "dfs-block" | "mult"
     max_fixpoint_iters: int = 0  # 0 -> |V| (safe upper bound)
-    bit_chunk: int = 64          # word-chunk for segment ORs
+    bit_chunk: int = 64          # word-chunk for segment-backend ORs
 
     @property
     def lab_bits(self) -> int:
@@ -78,18 +81,45 @@ class TDRIndex:
     pop: jax.Array        # [V] int32
     g_count: jax.Array    # [V] int32 (ways actually used)
     # host-side hash tables
-    vtx_bit_rows: np.ndarray   # bool [V, vtx_bits] — hash pattern of each vertex
+    vtx_words: np.ndarray      # uint32 [V, Wv] — packed hash row per vertex
     lab_slot: np.ndarray       # int32 [L] — label -> slot
     fixpoint_rounds: int = 0
-    _vtx_packed: "jax.Array | None" = None   # cached packed hash rows
+    _vtx_packed: Any = dataclasses.field(default=None, repr=False)
+    _engines: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def vtx_packed(self) -> jax.Array:
+        """Device copy of the per-vertex packed hash rows (cached)."""
         if self._vtx_packed is None:
-            object.__setattr__ if False else setattr(
-                self, "_vtx_packed",
-                jnp.asarray(bitset.pack_bits_np(self.vtx_bit_rows)))
+            self._vtx_packed = jnp.asarray(self.vtx_words)
         return self._vtx_packed
+
+    @property
+    def vtx_bit_rows(self) -> np.ndarray:
+        """Unpacked bool [V, vtx_bits] hash rows (compat/debug view only —
+        the build and query hot paths never materialize this)."""
+        return np.unpackbits(
+            self.vtx_words.view(np.uint8), axis=1,
+            bitorder="little")[:, :self.cfg.vtx_bits].astype(bool)
+
+    def engine(self, backend: str | None = None,
+               config: "engine_mod.EngineConfig | None" = None
+               ) -> "engine_mod.Engine":
+        """Cached packed-word engine over this index's graph.
+
+        The engine holds the packed adjacency bit-matrix, so repeated query
+        batches (and rebuilds) reuse both the operands and the jit caches.
+        """
+        key = engine_mod.resolve_backend(
+            backend or (config.backend if config else "auto"))
+        if key not in self._engines:
+            self._engines[key] = engine_mod.make_engine(
+                self.graph, backend=key, config=config)
+        return self._engines[key]
+
+    def adj_packed(self, *, reverse: bool = False) -> jax.Array:
+        """Packed adjacency bit-matrix for the engine (cached)."""
+        return self.engine().adjacency(reverse=reverse)
 
     def size_bytes(self, logical: bool = True) -> int:
         """Index footprint.  ``logical`` counts only the ways in use (the
@@ -140,10 +170,9 @@ def dfs_intervals(graph: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     return push.astype(np.int32), pop.astype(np.int32), disc.astype(np.int32)
 
 
-def _vertex_bit_rows(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
-    """Bloom bit pattern per vertex (bool [V, vtx_bits])."""
+def _vertex_hash_positions(cfg: TDRConfig, disc: np.ndarray) -> list:
+    """Bloom bit positions per vertex: one int64 [V] array per hash."""
     v_n = disc.shape[0]
-    rows = np.zeros((v_n, cfg.vtx_bits), dtype=bool)
     ids = np.arange(v_n, dtype=np.uint64)
     if cfg.hash_scheme == "dfs-block":
         # consecutive discovery order -> same bit (paper's locality hashing)
@@ -151,13 +180,32 @@ def _vertex_bit_rows(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
             max(v_n, 1))
     else:
         h0 = ((ids + 1) * np.uint64(2654435761)) % np.uint64(cfg.vtx_bits)
-    rows[np.arange(v_n), h0.astype(np.int64) % cfg.vtx_bits] = True
+    positions = [h0.astype(np.int64) % cfg.vtx_bits]
     ks = [np.uint64(0x9E3779B97F4A7C15), np.uint64(0xC2B2AE3D27D4EB4F),
           np.uint64(0x165667B19E3779F9)]
     for i in range(1, cfg.n_hashes):
         h = (((ids + 1) * ks[(i - 1) % len(ks)]) >> np.uint64(17)) % np.uint64(
             cfg.vtx_bits)
-        rows[np.arange(v_n), h.astype(np.int64)] = True
+        positions.append(h.astype(np.int64))
+    return positions
+
+
+def _vertex_bit_words(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
+    """Packed Bloom pattern per vertex (uint32 [V, ceil(vtx_bits/32)])."""
+    v_n = disc.shape[0]
+    words = np.zeros((v_n, bitset.n_words(cfg.vtx_bits)), dtype=np.uint32)
+    for pos in _vertex_hash_positions(cfg, disc):
+        bitset.set_bits_np(words, (np.arange(v_n),), pos)
+    return words
+
+
+def _vertex_bit_rows(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
+    """Bloom bit pattern per vertex (bool [V, vtx_bits]) — the unpacked
+    view used by the distributed bool-plane exchange and tests."""
+    v_n = disc.shape[0]
+    rows = np.zeros((v_n, cfg.vtx_bits), dtype=bool)
+    for pos in _vertex_hash_positions(cfg, disc):
+        rows[np.arange(v_n), pos] = True
     return rows
 
 
@@ -167,6 +215,22 @@ def _label_slots(cfg: TDRConfig, n_labels: int) -> np.ndarray:
         return ids.astype(np.int32)
     return (((ids + 1) * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(13)
             ).astype(np.int64).astype(np.int32) % np.int32(cfg.lab_slots)
+
+
+def _edge_label_words(cfg: TDRConfig, lab_slot: np.ndarray,
+                      labels: np.ndarray) -> np.ndarray:
+    """Per-edge packed label plane (uint32 [E, ceil(lab_bits/32)])."""
+    e_n = labels.shape[0]
+    words = np.zeros((e_n, bitset.n_words(cfg.lab_bits)), dtype=np.uint32)
+    bitset.set_bits_np(words, (np.arange(e_n),), lab_slot[labels])
+    return words
+
+
+def _null_words(cfg: TDRConfig) -> np.ndarray:
+    """Packed NULL-bit plane (uint32 [ceil(lab_bits/32)])."""
+    w = np.zeros(bitset.n_words(cfg.lab_bits), dtype=np.uint32)
+    w[cfg.null_bit >> 5] = np.uint32(1) << np.uint32(cfg.null_bit & 31)
+    return w
 
 
 def way_assignment(cfg: TDRConfig, graph: Graph,
@@ -188,143 +252,102 @@ def way_assignment(cfg: TDRConfig, graph: Graph,
 
 
 # ----------------------------------------------------------- device build
-@functools.partial(jax.jit, static_argnames=("v_n", "nbits", "max_iters",
-                                             "chunk"))
-def _closure_fixpoint(base: jax.Array, edge_src: jax.Array,
-                      edge_dst: jax.Array, *, v_n: int, nbits: int,
-                      max_iters: int, chunk: int) -> tuple[jax.Array, jax.Array]:
-    """R = lfp( R ∨ base ∨ OR_{(u,v)} R[v] ) as level-synchronous rounds."""
+def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
+                backend: str | None = None,
+                engine_config: "engine_mod.EngineConfig | None" = None
+                ) -> TDRIndex:
+    """Construct the full TDR index for every vertex of ``graph``.
 
-    def round_(r):
-        gathered = r[edge_dst]
-        upd = bitset.segment_or(gathered, edge_src, num_segments=v_n,
-                                chunk=chunk)
-        return r | upd
-
-    def cond(state):
-        _, changed, it = state
-        return jnp.logical_and(changed, it < max_iters)
-
-    def body(state):
-        r, _, it = state
-        nr = round_(r)
-        return nr, jnp.any(nr != r), it + 1
-
-    r0 = base
-    r, _, rounds = jax.lax.while_loop(cond, body,
-                                      (r0, jnp.bool_(True), jnp.int32(0)))
-    return r, rounds
-
-
-def build_index(graph: Graph, cfg: TDRConfig = TDRConfig()) -> TDRIndex:
-    """Construct the full TDR index for every vertex of ``graph``."""
+    All semiring math runs through the packed-word engine; ``backend``
+    (or ``engine_config`` / ``REPRO_ENGINE_BACKEND``) selects segment vs
+    pallas per the contract in ``repro.core.engine``.
+    """
     v_n, e_n = graph.n_vertices, graph.n_edges
     push, pop, disc = dfs_intervals(graph)
-    vtx_rows_np = _vertex_bit_rows(cfg, disc)
+    vtx_words_np = _vertex_bit_words(cfg, disc)
     lab_slot = _label_slots(cfg, graph.n_labels)
     g_count, way = way_assignment(cfg, graph, disc)
 
-    src = jnp.asarray(graph.src)
-    dst = jnp.asarray(graph.indices)
-    elab = jnp.asarray(graph.labels)
-    vtx_rows = jnp.asarray(vtx_rows_np)
+    if engine_config is None:
+        engine_config = engine_mod.EngineConfig(bit_chunk=cfg.bit_chunk)
+    eng = engine_mod.make_engine(graph, backend=backend,
+                                 config=engine_config)
+
+    src, dst = eng.edge_src, eng.edge_dst
+    vtx_w = jnp.asarray(vtx_words_np)                     # [V, Wv]
+    lab_w = jnp.asarray(_edge_label_words(cfg, lab_slot, graph.labels))
+    null_w = jnp.asarray(_null_words(cfg))                # [Wl]
     deg = jnp.asarray(graph.out_degree())
     is_leaf = deg == 0
 
-    # per-edge label bit plane [E, lab_bits]
-    lab_rows = jnp.zeros((e_n, cfg.lab_bits), dtype=jnp.bool_)
-    lab_rows = lab_rows.at[jnp.arange(e_n),
-                           jnp.asarray(lab_slot)[elab]].set(True)
-
     max_iters = cfg.max_fixpoint_iters or v_n
-    chunk = cfg.bit_chunk
 
     # ---- forward vertex closure  R[u] = OR (bit(v) | R[v]) --------------
-    base_v = bitset.segment_or(vtx_rows[dst], src, num_segments=v_n,
-                               chunk=chunk)
-    r_vtx, rounds = _closure_fixpoint(base_v, src, dst, v_n=v_n,
-                                      nbits=cfg.vtx_bits,
-                                      max_iters=max_iters, chunk=chunk)
+    base_v = eng.propagate(vtx_w)
+    r_vtx, rounds = eng.closure(base_v, max_iters=max_iters)
 
     # ---- forward label closure  Rl[u] = OR (bit(l) | Rl[v]) -------------
-    base_l = bitset.segment_or(lab_rows, src, num_segments=v_n, chunk=chunk)
-    r_lab, _ = _closure_fixpoint(base_l, src, dst, v_n=v_n,
-                                 nbits=cfg.lab_bits, max_iters=max_iters,
-                                 chunk=chunk)
+    base_l = eng.segment_or(lab_w, src, v_n)
+    r_lab, _ = eng.closure(base_l, max_iters=max_iters)
 
     # ---- reverse closure for N_in ---------------------------------------
-    base_r = bitset.segment_or(vtx_rows[src], dst, num_segments=v_n,
-                               chunk=chunk)
-    n_in, _ = _closure_fixpoint(base_r, dst, src, v_n=v_n,
-                                nbits=cfg.vtx_bits, max_iters=max_iters,
-                                chunk=chunk)
+    base_r = eng.propagate(vtx_w, reverse=True)
+    n_in, _ = eng.closure(base_r, reverse=True, max_iters=max_iters)
 
     # ---- vertical levels (exact k-round propagation) --------------------
-    null_row = jnp.zeros((cfg.lab_bits,), jnp.bool_).at[cfg.null_bit].set(True)
     d_lab_levels = []   # D_lab[:, l] — labels at hop l+1 from each vertex
     d_vtx_levels = []   # D_vtx[:, l] — vertices at hop l+1
-    cur_lab = jnp.where(is_leaf[:, None], null_row[None, :], base_l)
+    cur_lab = jnp.where(is_leaf[:, None], null_w[None, :], base_l)
     cur_vtx = base_v
     d_lab_levels.append(cur_lab)
     d_vtx_levels.append(cur_vtx)
     for _ in range(1, cfg.k):
-        nxt_lab = bitset.segment_or(cur_lab[dst], src, num_segments=v_n,
-                                    chunk=chunk)
-        nxt_lab = jnp.where(is_leaf[:, None], null_row[None, :], nxt_lab)
-        nxt_vtx = bitset.segment_or(cur_vtx[dst], src, num_segments=v_n,
-                                    chunk=chunk)
-        nxt_vtx = jnp.where(is_leaf[:, None], False, nxt_vtx)
+        nxt_lab = eng.propagate(cur_lab)
+        nxt_lab = jnp.where(is_leaf[:, None], null_w[None, :], nxt_lab)
+        nxt_vtx = eng.propagate(cur_vtx)
+        nxt_vtx = jnp.where(is_leaf[:, None], jnp.uint32(0), nxt_vtx)
         d_lab_levels.append(nxt_lab)
         d_vtx_levels.append(nxt_vtx)
         cur_lab, cur_vtx = nxt_lab, nxt_vtx
-    d_lab = jnp.stack(d_lab_levels, axis=1)   # [V, k, lab_bits]
-    d_vtx = jnp.stack(d_vtx_levels, axis=1)   # [V, k, vtx_bits]
+    d_lab = jnp.stack(d_lab_levels, axis=1)   # [V, k, Wl]
+    d_vtx = jnp.stack(d_vtx_levels, axis=1)   # [V, k, Wv]
 
     # ---- per-way projections --------------------------------------------
     gmax = cfg.g_max
     seg = src * gmax + jnp.asarray(way)
     n_seg = v_n * gmax
 
-    h_vtx = bitset.segment_or(vtx_rows[dst] | r_vtx[dst], seg,
-                              num_segments=n_seg, chunk=chunk)
-    h_lab = bitset.segment_or(lab_rows | r_lab[dst], seg,
-                              num_segments=n_seg, chunk=chunk)
-    v_lab0 = bitset.segment_or(lab_rows, seg, num_segments=n_seg, chunk=chunk)
-    v_vtx0 = bitset.segment_or(vtx_rows[dst], seg, num_segments=n_seg,
-                               chunk=chunk)
-    v_lab_lv = [v_lab0]
-    v_vtx_lv = [v_vtx0]
+    h_vtx = eng.segment_or(vtx_w[dst] | r_vtx[dst], seg, n_seg)
+    h_lab = eng.segment_or(lab_w | r_lab[dst], seg, n_seg)
+    v_lab_lv = [eng.segment_or(lab_w, seg, n_seg)]
+    v_vtx_lv = [eng.segment_or(vtx_w[dst], seg, n_seg)]
     for l in range(1, cfg.k):
-        v_lab_lv.append(bitset.segment_or(d_lab[dst, l - 1], seg,
-                                          num_segments=n_seg, chunk=chunk))
-        v_vtx_lv.append(bitset.segment_or(d_vtx[dst, l - 1], seg,
-                                          num_segments=n_seg, chunk=chunk))
+        v_lab_lv.append(eng.segment_or(d_lab[dst, l - 1], seg, n_seg))
+        v_vtx_lv.append(eng.segment_or(d_vtx[dst, l - 1], seg, n_seg))
 
-    h_vtx = h_vtx.reshape(v_n, gmax, cfg.vtx_bits)
-    h_lab = h_lab.reshape(v_n, gmax, cfg.lab_bits)
-    v_lab = jnp.stack(v_lab_lv, axis=1).reshape(v_n, gmax, cfg.k,
-                                                cfg.lab_bits)
-    v_vtx = jnp.stack(v_vtx_lv, axis=1).reshape(v_n, gmax, cfg.k,
-                                                cfg.vtx_bits)
+    wv = vtx_w.shape[-1]
+    wl = lab_w.shape[-1]
+    h_vtx = h_vtx.reshape(v_n, gmax, wv)
+    h_lab = h_lab.reshape(v_n, gmax, wl)
+    v_lab = jnp.stack(v_lab_lv, axis=1).reshape(v_n, gmax, cfg.k, wl)
+    v_vtx = jnp.stack(v_vtx_lv, axis=1).reshape(v_n, gmax, cfg.k, wv)
 
     # the vertex hashes itself into each *used* way (paper Alg. 1 line 10)
     way_used = jnp.arange(gmax)[None, :] < jnp.asarray(g_count)[:, None]
-    h_vtx = h_vtx | (vtx_rows[:, None, :] & way_used[:, :, None])
+    h_vtx = h_vtx | jnp.where(way_used[:, :, None], vtx_w[:, None, :],
+                              jnp.uint32(0))
 
-    n_out = jnp.any(h_vtx, axis=1) if gmax > 0 else r_vtx
-    n_out = n_out | vtx_rows  # self is "reachable" for membership filtering
+    n_out = bitset.or_reduce(h_vtx, axis=1) if gmax > 0 else r_vtx
+    n_out = n_out | vtx_w  # self is "reachable" for membership filtering
 
     idx = TDRIndex(
         cfg=cfg, graph=graph,
-        h_vtx=bitset.pack_bits(h_vtx),
-        h_lab=bitset.pack_bits(h_lab),
-        v_vtx=bitset.pack_bits(v_vtx),
-        v_lab=bitset.pack_bits(v_lab),
-        n_out=bitset.pack_bits(n_out),
-        n_in=bitset.pack_bits(n_in | vtx_rows),
+        h_vtx=h_vtx, h_lab=h_lab, v_vtx=v_vtx, v_lab=v_lab,
+        n_out=n_out, n_in=n_in | vtx_w,
         push=jnp.asarray(push), pop=jnp.asarray(pop),
         g_count=jnp.asarray(g_count),
-        vtx_bit_rows=vtx_rows_np, lab_slot=lab_slot,
+        vtx_words=vtx_words_np, lab_slot=lab_slot,
         fixpoint_rounds=int(rounds),
     )
+    idx._engines[eng.backend] = eng
     return idx

@@ -1,34 +1,42 @@
 """Answering PCR queries with the TDR index (paper §V, Alg. 2) — batched.
 
-The paper's Alg. 2 interleaves pruning with a DFS.  On TPU we split the same
-logic into two phases, both batched over the whole query set:
+The paper's Alg. 2 interleaves pruning with a DFS.  Here the same logic is a
+**planner/executor split**, both halves batched over the whole query set and
+running end-to-end on packed uint32 words through ``repro.core.engine``:
+
+Planner — ``compile_queries`` flattens DNF terms into a fully vectorized
+``QueryPlan``: packed required/forbidden label-slot planes, packed raw
+forbidden-label rows, and padded required-label ids.  No per-edge or
+per-vertex host arrays — everything edge-indexed is derived on device by
+the executor via label gathers (no ``elab == l`` Python scans, no
+``[Q, E]`` host-side dense masks).
 
 Phase 1 — *filter cascade* (pure index math, no traversal):
   * ``u == v``            -> TRUE iff the term requires no labels
   * ``bits(v) ⊄ N_out(u)``-> FALSE   (paper: VertexReach)
   * ``bits(u) ⊄ N_in(v)`` -> FALSE   (paper: VertexReach, reverse)
   * interval ancestor + unconstrained term -> TRUE (paper: early stopping)
-  * per-way group pruning: way g survives iff
-      - ``bits(v) ⊆ H_vtx[u,g]``          (target may be in the way)
-      - ``req    ⊆ H_lab[u,g]``           (required labels may appear)
-      - no vertical level ℓ<k refutes it: a level refutes when *every*
-        real label at hop ℓ+1 is forbidden while v provably was not reached
-        within ℓ hops (paper: path-index pruning / early stopping)
-    no surviving way -> FALSE
+  * per-way group pruning via ``kernels.ops.filter_ways`` (the fused
+    Pallas cascade on TPU / ref oracle elsewhere); no surviving way -> FALSE
   * everything else -> UNKNOWN, goes to phase 2.
 
-Phase 2 — *exact product-graph expansion* for survivors only: frontier over
-states ``(vertex, subset of required labels seen)`` with forbidden edges
-deleted and the frontier confined to the Bloom *corridor*
-``V_out(u) ∩ V_in(v)`` (the index applied inside the search — the paper's
-VertexReach at every step, vectorised).  The expansion is the same
-boolean-semiring product the index build uses, so answers are exact:
-property tests assert bit-equality with the DFS oracle.
+Phase 2 — *exact product-graph expansion* for survivors only, run by a
+persistent jitted executor.  The frontier is a ``[V, Q]`` array of packed
+state-subset bitfields (bit s of word (x, q) == "query q can stand at x
+having seen required-subset s"); one round is the engine's OR-semiring
+propagate with per-edge state transitions done as constant-mask shifts on
+the packed field, confined to the Bloom *corridor* ``V_out(u) ∩ V_in(v)``
+(packed).  With the ``pallas`` backend a round is one
+``kernels.bitset_matmul`` per label class (per special label + one matrix
+for all neutral labels).  The expansion is the same boolean-semiring
+product the index build uses, so answers are exact: property tests assert
+bit-equality with the DFS oracle.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Sequence
 
 import jax
@@ -36,25 +44,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitset
+from . import engine as engine_mod
 from . import pattern as pat
-from .graph import Graph
-from .tdr_build import TDRIndex
+from .tdr_build import TDRIndex, _null_words
 
 FALSE, TRUE, UNKNOWN = 0, 1, 2
 
+_FULL = jnp.uint32(0xFFFFFFFF)
 
-# ------------------------------------------------------------------- jobs
+
+# ------------------------------------------------------------------ plans
 @dataclasses.dataclass
-class QueryBatch:
-    """One flattened DNF-term job per row."""
-    qid: np.ndarray        # [J] query id
-    u: np.ndarray          # [J]
-    v: np.ndarray          # [J]
-    req_plane: np.ndarray  # bool [J, lab_bits]  required-label slots
-    forb_plane: np.ndarray # bool [J, lab_bits]  forbidden-label slots
-    req_labels: np.ndarray # int32 [J, max_m]    raw label ids, -1 padded
-    forb_raw: np.ndarray   # bool [J, L]         raw forbidden labels
+class QueryPlan:
+    """Planner output: one flattened DNF-term job per row, packed planes.
+
+    ``req_w``/``forb_w`` are label-*slot* planes (the index's Bloom space,
+    used by the filter cascade); ``forb_raw_w`` is packed over raw label
+    ids — the executor's edge-forbid test must be exact, and slot hashing
+    may collide when ``n_labels > lab_slots``.
+    """
+    qid: np.ndarray         # int32 [J] query id (-1 = padding row)
+    u: np.ndarray           # int32 [J]
+    v: np.ndarray           # int32 [J]
+    req_w: np.ndarray       # uint32 [J, Wl]   required label-slot plane
+    forb_w: np.ndarray      # uint32 [J, Wl]   forbidden label-slot plane
+    forb_raw_w: np.ndarray  # uint32 [J, WL]   raw forbidden labels (packed)
+    req_labels: np.ndarray  # int32 [J, max_m] raw required ids, -1 padded
+    full_mask: np.ndarray   # int32 [J]        target subset state
     n_queries: int
+    max_m: int
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.qid.shape[0])
+
+    def pad_to(self, jp: int) -> "QueryPlan":
+        """Pad the job axis (padding rows: qid=-1 self-queries, empty
+        pattern -> TRUE in the cascade but never landing in answers)."""
+        j = self.n_jobs
+        if jp <= j:
+            return self
+        p = jp - j
+
+        def zrows(a):
+            return np.concatenate(
+                [a, np.zeros((p,) + a.shape[1:], dtype=a.dtype)])
+
+        return QueryPlan(
+            qid=np.concatenate([self.qid, np.full(p, -1, np.int32)]),
+            u=zrows(self.u), v=zrows(self.v),
+            req_w=zrows(self.req_w), forb_w=zrows(self.forb_w),
+            forb_raw_w=zrows(self.forb_raw_w),
+            req_labels=np.concatenate(
+                [self.req_labels, np.full((p, self.max_m), -1, np.int32)]),
+            full_mask=zrows(self.full_mask),
+            n_queries=self.n_queries, max_m=self.max_m)
 
 
 @dataclasses.dataclass
@@ -69,54 +113,77 @@ class QueryStats:
 
 def compile_queries(index: TDRIndex,
                     queries: Sequence[tuple[int, int, pat.Pattern]],
-                    max_m: int = 4) -> QueryBatch:
+                    max_m: int = 4) -> QueryPlan:
+    """Compile (u, v, pattern) triples into a vectorized ``QueryPlan``.
+
+    DNF expansion walks the pattern ASTs (inherently per-term Python); all
+    plane construction from the flattened term lists is vectorized numpy
+    scatters into packed words.
+    """
     cfg = index.cfg
     n_lab = index.graph.n_labels
-    qid, us, vs, reqp, forbp, reql, forbr = [], [], [], [], [], [], []
+    wl = bitset.n_words(cfg.lab_bits)
+    wraw = bitset.n_words(max(n_lab, 1))
+
+    qid, us, vs = [], [], []
+    req_j, req_l = [], []      # flattened (job, label) pairs
+    forb_j, forb_l = [], []
+    req_rows = []              # per-job sorted required ids
     for qi, (u, v, p) in enumerate(queries):
         for term in pat.to_dnf(p):
             if len(term.require) > max_m:
                 raise ValueError(
                     f"term with {len(term.require)} required labels exceeds "
                     f"max_m={max_m}; decompose the pattern")
-            rp = np.zeros(cfg.lab_bits, dtype=bool)
-            fp = np.zeros(cfg.lab_bits, dtype=bool)
-            fr = np.zeros(n_lab, dtype=bool)
-            for l in term.require:
-                rp[index.lab_slot[l]] = True
-            for l in term.forbid:
-                fp[index.lab_slot[l]] = True
-                fr[l] = True
-            rl = sorted(term.require) + [-1] * (max_m - len(term.require))
+            j = len(qid)
             qid.append(qi); us.append(u); vs.append(v)
-            reqp.append(rp); forbp.append(fp); reql.append(rl); forbr.append(fr)
-    if not qid:  # all-false patterns
-        return QueryBatch(np.zeros(0, np.int32), np.zeros(0, np.int32),
-                          np.zeros(0, np.int32),
-                          np.zeros((0, cfg.lab_bits), bool),
-                          np.zeros((0, cfg.lab_bits), bool),
-                          np.zeros((0, max_m), np.int32),
-                          np.zeros((0, n_lab), bool), len(queries))
-    return QueryBatch(np.asarray(qid, np.int32), np.asarray(us, np.int32),
-                      np.asarray(vs, np.int32),
-                      np.stack(reqp), np.stack(forbp),
-                      np.asarray(reql, np.int32), np.stack(forbr),
-                      len(queries))
+            rl = sorted(term.require)
+            req_rows.append(rl)
+            req_j += [j] * len(rl); req_l += rl
+            forb_j += [j] * len(term.forbid); forb_l += sorted(term.forbid)
+
+    j_n = len(qid)
+    req_w = np.zeros((j_n, wl), dtype=np.uint32)
+    forb_w = np.zeros((j_n, wl), dtype=np.uint32)
+    forb_raw_w = np.zeros((j_n, wraw), dtype=np.uint32)
+    req_labels = np.full((j_n, max_m), -1, dtype=np.int32)
+    full_mask = np.zeros(j_n, dtype=np.int32)
+    if req_j:
+        rj = np.asarray(req_j); rl = np.asarray(req_l, np.int64)
+        bitset.set_bits_np(req_w, (rj,), index.lab_slot[rl])
+    if forb_j:
+        fj = np.asarray(forb_j); fl = np.asarray(forb_l, np.int64)
+        bitset.set_bits_np(forb_w, (fj,), index.lab_slot[fl])
+        bitset.set_bits_np(forb_raw_w, (fj,), fl)
+    for j, rl in enumerate(req_rows):
+        req_labels[j, :len(rl)] = rl
+        full_mask[j] = (1 << len(rl)) - 1
+
+    return QueryPlan(
+        qid=np.asarray(qid, np.int32).reshape(j_n),
+        u=np.asarray(us, np.int32).reshape(j_n),
+        v=np.asarray(vs, np.int32).reshape(j_n),
+        req_w=req_w, forb_w=forb_w, forb_raw_w=forb_raw_w,
+        req_labels=req_labels, full_mask=full_mask,
+        n_queries=len(queries), max_m=max_m)
 
 
 # ----------------------------------------------------------- phase 1 (jit)
-@functools.partial(jax.jit, static_argnames=("k",))
-def _filter_cascade(u, v, req_plane, forb_plane, null_plane,
-                    vtx_rows_packed, h_vtx, h_lab, v_vtx, v_lab,
-                    n_out, n_in, push, pop, *, k: int):
-    """Vectorised filter cascade -> verdict [J] in {FALSE, TRUE, UNKNOWN}."""
-    req_w = bitset.pack_bits(req_plane)
-    forb_w = bitset.pack_bits(forb_plane)
-    vbits = vtx_rows_packed[v]            # [J, Wv]
-    ubits = vtx_rows_packed[u]
+@functools.partial(jax.jit, static_argnames=("k", "mode"))
+def _filter_cascade(u, v, req_w, forb_w, null_w,
+                    vtx_packed, h_vtx, h_lab, v_vtx, v_lab,
+                    n_out, n_in, push, pop, *, k: int, mode: str):
+    """Vectorised filter cascade -> verdict [J] in {FALSE, TRUE, UNKNOWN}.
 
-    req_empty = jnp.all(~req_plane, axis=-1)
-    forb_empty = jnp.all(~forb_plane, axis=-1)
+    All label planes arrive packed; the per-way group predicate runs through
+    ``kernels.ops.filter_ways`` (fused Pallas kernel / ref oracle)."""
+    from repro.kernels import ops  # deferred: kernels import repro.core
+
+    vbits = vtx_packed[v]            # [J, Wv]
+    ubits = vtx_packed[u]
+
+    req_empty = jnp.all(req_w == 0, axis=-1)
+    forb_empty = jnp.all(forb_w == 0, axis=-1)
 
     # u == v: empty path
     same = u == v
@@ -131,31 +198,9 @@ def _filter_cascade(u, v, req_plane, forb_plane, null_plane,
     anc = (push[u] < push[v]) & (pop[v] < pop[u])
     true_anc = anc & req_empty & forb_empty & ~same
 
-    # ---- per-way group pruning ----
-    hv = h_vtx[u]                          # [J, G, Wv]
-    hl = h_lab[u]                          # [J, G, Wl]
-    way_has_target = bitset.words_contain(hv, vbits[:, None, :])
-    way_has_req = bitset.words_contain(hl, req_w[:, None, :])
-
-    # vertical refutation per level
-    vl = v_lab[u]                          # [J, G, k, Wl]
-    vv = v_vtx[u]                          # [J, G, k, Wv]
-    # level blocked: every *real* label at hop l+1 is forbidden (the NULL
-    # bit marks paths that already ended -- those cannot continue either,
-    # so it is excluded from the "still traversable" test)
-    blocked = jnp.all(
-        (vl & ~forb_w[:, None, None, :] & ~null_plane[None, None, None, :])
-        == 0, axis=-1)                     # [J, G, k]
-    # v reached within <= l hops? (levels 0..l-1)
-    reached = bitset.words_contain(vv, vbits[:, None, None, :])  # [J,G,k]
-    reached_upto = jnp.cumsum(reached.astype(jnp.int32), axis=-1) > 0
-    # refute at level l: blocked[l] and not reached within l hops
-    not_reached_before = jnp.concatenate(
-        [jnp.ones_like(reached_upto[..., :1]),
-         ~reached_upto[..., :-1]], axis=-1)
-    refuted = jnp.any(blocked & not_reached_before, axis=-1)  # [J, G]
-
-    way_ok = way_has_target & way_has_req & ~refuted
+    # ---- per-way group pruning (fused kernel) ----
+    way_ok = ops.filter_ways(h_vtx[u], h_lab[u], v_vtx[u], v_lab[u],
+                             vbits, req_w, forb_w, null_w, mode=mode)
     any_way = jnp.any(way_ok, axis=-1)
 
     maybe = topo_maybe & (any_way | same)
@@ -170,41 +215,44 @@ def _filter_cascade(u, v, req_plane, forb_plane, null_plane,
 
 
 # ----------------------------------------------------------- phase 2 (jit)
-@functools.partial(jax.jit, static_argnames=("v_n", "n_states", "max_rounds"))
-def _exact_expand(u, v, edge_ok, edge_sbit, full_mask, corridor,
-                  edge_src, edge_dst, *, v_n: int, n_states: int,
-                  max_rounds: int):
-    """Batched product-graph reachability.
+def _state_has_masks(n_states: int, max_m: int) -> np.ndarray:
+    """HAS[i] = packed mask of subset-states whose bit i is set."""
+    has = np.zeros(max_m, dtype=np.uint32)
+    for i in range(max_m):
+        for s in range(n_states):
+            if (s >> i) & 1:
+                has[i] |= np.uint32(1) << np.uint32(s)
+    return has
 
-    Args:
-      u, v:        [Q] endpoints
-      edge_ok:     [Q, E] edge not forbidden
-      edge_sbit:   [Q, E] subset bit contributed by the edge's label (0 if
-                   the label is not required)
-      full_mask:   [Q]    target subset state
-      corridor:    [Q, V] Bloom corridor V_out(u) ∩ V_in(v)
-    Returns: reached [Q] bool, rounds int32
-    """
-    q_n, e_n = edge_ok.shape
-    states = jnp.arange(n_states, dtype=jnp.int32)
 
-    f0 = jnp.zeros((q_n, n_states, v_n), dtype=jnp.bool_)
-    f0 = f0.at[jnp.arange(q_n), 0, u].set(True)
+def _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed):
+    """Packed Bloom corridor ``V_out(u) ∩ V_in(v)`` as a [V, Q] word mask
+    (all-ones where vertex x may lie on a u→v path)."""
+    q_n = u.shape[0]
+    cor = (bitset.words_contain(n_out_u[:, None, :], vtx_packed[None, :, :]) &
+           bitset.words_contain(n_in_v[:, None, :], vtx_packed[None, :, :]))
+    cor = cor.at[jnp.arange(q_n), v].set(True)
+    cor = cor.at[jnp.arange(q_n), u].set(True)
+    return jnp.where(cor.T, _FULL, jnp.uint32(0))        # [V, Q]
 
-    def one_round(f):
-        def per_query(fq, okq, sbitq, corq):
-            val = fq[:, edge_src] & okq[None, :]          # [S, E]
-            tgt_state = states[:, None] | sbitq[None, :]   # [S, E]
-            seg = tgt_state * v_n + edge_dst[None, :]
-            upd = jax.ops.segment_max(
-                val.reshape(-1).astype(jnp.uint8), seg.reshape(-1),
-                num_segments=n_states * v_n)
-            upd = upd.reshape(n_states, v_n).astype(jnp.bool_)
-            return fq | (upd & corq[None, :])
-        return jax.vmap(per_query)(f, edge_ok, edge_sbit, corridor)
+
+def _transition(val, has, sh):
+    """Apply subset transition ``s -> s | m`` to packed state bitfields.
+
+    ``has`` masks the state bits whose subset already contains the edge's
+    required label (they stay); the rest shift up by ``sh = 2^i`` (setting
+    bit i of the subset index).  ``has = ~0, sh = 0`` is the identity."""
+    return (val & has) | ((val & ~has) << sh)
+
+
+def _expand_loop(f0, round_, v, full_mask, max_rounds):
+    """Shared fixpoint driver: iterate ``round_`` until every query's target
+    state bit is set, nothing changes, or ``max_rounds`` is hit."""
+    q_n = v.shape[0]
 
     def done_of(f):
-        return f[jnp.arange(q_n), full_mask, v]
+        return (f[v, jnp.arange(q_n)] >>
+                full_mask.astype(jnp.uint32)) & 1 == 1
 
     def cond(state):
         f, prev_f, it, _ = state
@@ -214,13 +262,170 @@ def _exact_expand(u, v, edge_ok, edge_sbit, full_mask, corridor,
 
     def body(state):
         f, _, it, _ = state
-        nf = one_round(f)
+        nf = round_(f)
         return nf, f, it + 1, done_of(nf)
 
-    f1 = one_round(f0)
-    state = (f1, f0, jnp.int32(1), done_of(f1))
-    f, _, rounds, _ = jax.lax.while_loop(cond, body, state)
+    f1 = round_(f0)
+    f, _, rounds, _ = jax.lax.while_loop(
+        cond, body, (f1, f0, jnp.int32(1), done_of(f1)))
     return done_of(f), rounds
+
+
+@functools.partial(jax.jit, static_argnames=("v_n", "n_states", "max_m",
+                                             "max_rounds", "chunk_words"))
+def _expand_segment(u, v, req_labels, forb_raw_w, full_mask,
+                    n_out_u, n_in_v, vtx_packed, elab, edge_src, edge_dst,
+                    *, v_n: int, n_states: int, max_m: int, max_rounds: int,
+                    chunk_words: int):
+    """Segment-backend executor: frontier [V, Q] packed state bitfields;
+    one round = gather, per-edge transition, packed segment-OR scatter."""
+    q_n = u.shape[0]
+    cor_mask = _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed)
+
+    # per-(edge, query) masks from label gathers (exact raw-label forbid)
+    okbit = (forb_raw_w[:, elab >> 5] >>
+             (elab & 31).astype(jnp.uint32)[None, :]) & 1       # [Q, E]
+    allow = jnp.where(okbit == 0, _FULL, jnp.uint32(0)).T       # [E, Q]
+    has_c = _state_has_masks(n_states, max_m)
+    has = jnp.full((elab.shape[0], q_n), _FULL, jnp.uint32)
+    sh = jnp.zeros((elab.shape[0], q_n), jnp.uint32)
+    for i in range(max_m):  # static unroll; require-sets hold distinct labels
+        match = req_labels[:, i][None, :] == elab[:, None]      # [E, Q]
+        has = jnp.where(match, jnp.uint32(has_c[i]), has)
+        sh = jnp.where(match, jnp.uint32(1 << i), sh)
+
+    f0 = jnp.zeros((v_n, q_n), jnp.uint32)
+    f0 = f0.at[u, jnp.arange(q_n)].set(jnp.uint32(1))   # state ∅ at source
+
+    def round_(f):
+        val = _transition(f[edge_src] & allow, has, sh)         # [E, Q]
+        upd = bitset.segment_or_words(val, edge_dst, num_segments=v_n,
+                                      chunk_words=chunk_words)
+        return f | (upd & cor_mask)
+
+    return _expand_loop(f0, round_, v, full_mask, max_rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_m",
+                                             "max_rounds", "mode"))
+def _expand_matmul(u, v, class_adj, class_label, req_labels, forb_raw_w,
+                   full_mask, n_out_u, n_in_v, vtx_packed, *,
+                   n_states: int, max_m: int, max_rounds: int, mode: str):
+    """Pallas-backend executor: one ``bitset_matmul`` per label class per
+    round on the packed reverse adjacency (class = one special label that
+    some query requires/forbids, or the merged neutral rest)."""
+    q_n = u.shape[0]
+    cor_mask = _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed)
+
+    # per-(class, query) masks; the last class is neutral (label -1):
+    # always allowed, identity transition
+    lab = class_label                                           # [C]
+    labx = jnp.maximum(lab, 0)
+    okbit = (forb_raw_w[:, labx >> 5] >>
+             (labx & 31).astype(jnp.uint32)[None, :]) & 1       # [Q, C]
+    neutral = (lab < 0)[None, :]
+    allow = jnp.where(neutral | (okbit == 0), _FULL, jnp.uint32(0)).T
+    has_c = _state_has_masks(n_states, max_m)
+    has = jnp.full((lab.shape[0], q_n), _FULL, jnp.uint32)
+    sh = jnp.zeros((lab.shape[0], q_n), jnp.uint32)
+    for i in range(max_m):
+        match = (req_labels[:, i][None, :] == lab[:, None]) & ~neutral.T
+        has = jnp.where(match, jnp.uint32(has_c[i]), has)
+        sh = jnp.where(match, jnp.uint32(1 << i), sh)
+
+    v_n = vtx_packed.shape[0]
+    f0 = jnp.zeros((v_n, q_n), jnp.uint32)
+    f0 = f0.at[u, jnp.arange(q_n)].set(jnp.uint32(1))
+
+    def round_(f):
+        upd = jnp.zeros_like(f)
+        for c in range(class_adj.shape[0]):  # static unroll, C small
+            y = engine_mod._matmul_rows(class_adj[c], f, mode)[:v_n]
+            upd = upd | _transition(y & allow[c][None, :],
+                                    has[c][None, :], sh[c][None, :])
+        return f | (upd & cor_mask)
+
+    return _expand_loop(f0, round_, v, full_mask, max_rounds)
+
+
+# ---------------------------------------------------------------- executor
+class ExactExecutor:
+    """Persistent phase-2 executor bound to one (index, engine) pair.
+
+    Holds the device-resident operands (edge lists, label rows, Blooms) and
+    keeps the jitted expansion entry points warm across ``answer_batch``
+    calls; chunking pads to stable shapes so recompiles only happen when
+    the chunk size or the special-label set changes."""
+
+    def __init__(self, index: TDRIndex, eng: "engine_mod.Engine"):
+        self.index = index
+        self.engine = eng
+        self.elab = jnp.asarray(index.graph.labels)
+
+    def special_labels(self, plan: QueryPlan,
+                       jobs: np.ndarray) -> tuple[int, ...]:
+        """Labels some pending job requires or forbids (the matmul backend
+        gets one adjacency class per special label + one neutral)."""
+        req = plan.req_labels[jobs]
+        spec = set(int(l) for l in req[req >= 0])
+        forb = np.bitwise_or.reduce(plan.forb_raw_w[jobs], axis=0)
+        for w, word in enumerate(forb):
+            for b in range(32):
+                if (int(word) >> b) & 1:
+                    spec.add(w * 32 + b)
+        return tuple(sorted(spec))
+
+    def run_chunk(self, plan: QueryPlan, jobs: np.ndarray,
+                  special: tuple[int, ...]) -> tuple[np.ndarray, int]:
+        """Expand one padded chunk of pending jobs -> (reached, rounds)."""
+        idx, eng = self.index, self.engine
+        g = idx.graph
+        n_states = 1 << plan.max_m
+        if n_states > 32:
+            raise ValueError(
+                f"max_m={plan.max_m} needs {n_states} subset states; the "
+                "packed executor holds at most 32 (max_m <= 5)")
+        max_rounds = g.n_vertices * n_states + 1
+        uu = jnp.asarray(plan.u[jobs])
+        vv = jnp.asarray(plan.v[jobs])
+        req_labels = jnp.asarray(plan.req_labels[jobs])
+        forb_raw_w = jnp.asarray(plan.forb_raw_w[jobs])
+        full_mask = jnp.asarray(plan.full_mask[jobs])
+        n_out_u, n_in_v = idx.n_out[uu], idx.n_in[vv]
+        use_matmul = eng.backend == "pallas"
+        if use_matmul and not eng.can_pack_dense(len(special) + 1):
+            # the class-matrix set would blow the dense cap the engine
+            # promised to respect — run this batch's rounds as packed
+            # segment reductions instead (same bits, no dense operand)
+            warnings.warn(
+                f"engine: {len(special) + 1} label-class adjacency "
+                "matrices exceed max_dense_bytes; expanding this batch "
+                "via the segment path", stacklevel=3)
+            use_matmul = False
+        if use_matmul:
+            class_adj = eng.label_class_adjacency(special)
+            class_label = jnp.asarray(np.asarray(special + (-1,), np.int32))
+            reached, rounds = _expand_matmul(
+                uu, vv, class_adj, class_label, req_labels, forb_raw_w,
+                full_mask, n_out_u, n_in_v, idx.vtx_packed,
+                n_states=n_states, max_m=plan.max_m, max_rounds=max_rounds,
+                mode=eng.matmul_mode)
+        else:
+            reached, rounds = _expand_segment(
+                uu, vv, req_labels, forb_raw_w, full_mask, n_out_u, n_in_v,
+                idx.vtx_packed, self.elab, eng.edge_src, eng.edge_dst,
+                v_n=g.n_vertices, n_states=n_states, max_m=plan.max_m,
+                max_rounds=max_rounds,
+                chunk_words=eng.config.chunk_words)
+        return np.asarray(reached), int(rounds)
+
+
+def _executor(index: TDRIndex, eng: "engine_mod.Engine") -> ExactExecutor:
+    ex = getattr(eng, "_executor", None)
+    if ex is None or ex.index is not index:
+        ex = ExactExecutor(index, eng)
+        eng._executor = ex
+    return ex
 
 
 # ----------------------------------------------------------------- driver
@@ -235,111 +440,69 @@ def answer_batch(index: TDRIndex,
                  queries: Sequence[tuple[int, int, pat.Pattern]],
                  *, max_m: int = 4, exact_chunk: int = 16,
                  stats: QueryStats | None = None,
-                 filters_only: bool = False) -> np.ndarray:
-    """Answer a batch of PCR queries.  Returns bool [n_queries]."""
-    g = index.graph
-    batch = compile_queries(index, queries, max_m=max_m)
+                 filters_only: bool = False,
+                 backend: str | None = None,
+                 engine_config: "engine_mod.EngineConfig | None" = None
+                 ) -> np.ndarray:
+    """Answer a batch of PCR queries.  Returns bool [n_queries].
+
+    ``backend``/``engine_config`` select the packed-word engine backend for
+    phase 2 (and the kernel mode for phase 1); default follows the
+    ``repro.core.engine`` contract.
+    """
+    if max_m > 5:
+        raise ValueError(
+            f"max_m={max_m}: the packed executor holds subset states in one "
+            "uint32 bitfield, so at most 5 required labels per term (32 "
+            "states); decompose the pattern")
+    eng = index.engine(backend, engine_config)
+    plan = compile_queries(index, queries, max_m=max_m)
     stats = stats if stats is not None else QueryStats()
-    stats.n_queries += batch.n_queries
-    stats.n_jobs += len(batch.qid)
-    answers = np.zeros(batch.n_queries, dtype=bool)
-    if len(batch.qid) == 0:
+    stats.n_queries += plan.n_queries
+    stats.n_jobs += plan.n_jobs
+    answers = np.zeros(plan.n_queries, dtype=bool)
+    if plan.n_jobs == 0:
         return answers
 
-    # pad the job axis to a power of two so jit shapes stay stable across
-    # batches (padding rows are self-queries with empty patterns -> TRUE,
-    # but their qid=-1 so they never land in `answers`)
-    j = len(batch.qid)
-    jp = _pad_pow2(j)
-    if jp != j:
-        pad = jp - j
-        batch = QueryBatch(
-            np.concatenate([batch.qid, np.full(pad, -1, np.int32)]),
-            np.concatenate([batch.u, np.zeros(pad, np.int32)]),
-            np.concatenate([batch.v, np.zeros(pad, np.int32)]),
-            np.concatenate([batch.req_plane,
-                            np.zeros((pad,) + batch.req_plane.shape[1:],
-                                     bool)]),
-            np.concatenate([batch.forb_plane,
-                            np.zeros((pad,) + batch.forb_plane.shape[1:],
-                                     bool)]),
-            np.concatenate([batch.req_labels,
-                            np.full((pad, max_m), -1, np.int32)]),
-            np.concatenate([batch.forb_raw,
-                            np.zeros((pad,) + batch.forb_raw.shape[1:],
-                                     bool)]),
-            batch.n_queries)
-
-    vtx_packed = index.vtx_packed
-    null_plane_np = np.zeros(index.cfg.lab_bits, dtype=bool)
-    null_plane_np[index.cfg.null_bit] = True
-    null_plane = bitset.pack_bits(jnp.asarray(null_plane_np))
+    # pad the job axis to a power of two so jit shapes stay stable
+    plan_p = plan.pad_to(_pad_pow2(plan.n_jobs))
+    null_w = jnp.asarray(_null_words(index.cfg))
     verdict = np.asarray(_filter_cascade(
-        jnp.asarray(batch.u), jnp.asarray(batch.v),
-        jnp.asarray(batch.req_plane), jnp.asarray(batch.forb_plane),
-        null_plane,
-        vtx_packed, index.h_vtx, index.h_lab, index.v_vtx, index.v_lab,
-        index.n_out, index.n_in, index.push, index.pop, k=index.cfg.k))
+        jnp.asarray(plan_p.u), jnp.asarray(plan_p.v),
+        jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w), null_w,
+        index.vtx_packed, index.h_vtx, index.h_lab, index.v_vtx,
+        index.v_lab, index.n_out, index.n_in, index.push, index.pop,
+        k=index.cfg.k, mode=eng.kernel_mode))
 
-    real = batch.qid >= 0
+    real = plan_p.qid >= 0
     stats.filter_false += int(((verdict == FALSE) & real).sum())
     stats.filter_true += int(((verdict == TRUE) & real).sum())
-    for j in np.flatnonzero((verdict == TRUE) & real):
-        answers[batch.qid[j]] = True
+    np.logical_or.at(answers, plan_p.qid[(verdict == TRUE) & real], True)
 
     pending = np.flatnonzero((verdict == UNKNOWN) & real)
     # jobs whose query is already TRUE need no exact work
-    pending = np.asarray([j for j in pending if not answers[batch.qid[j]]],
-                         dtype=np.int64)
+    pending = pending[~answers[plan_p.qid[pending]]]
     if filters_only:
         # treat UNKNOWN as reachable (upper bound) -- used to measure the
         # cascade's pruning power in benchmarks
-        for j in pending:
-            answers[batch.qid[j]] = True
+        np.logical_or.at(answers, plan_p.qid[pending], True)
         return answers
     stats.exact_jobs += len(pending)
     if len(pending) == 0:
         return answers
 
-    edge_src = jnp.asarray(g.src)
-    edge_dst = jnp.asarray(g.indices)
-    elab = np.asarray(g.labels)
-    n_states = 1 << max_m
-    max_rounds = g.n_vertices * n_states + 1
-
+    ex = _executor(index, eng)
+    special = ex.special_labels(plan_p, pending)
     for c0 in range(0, len(pending), exact_chunk):
         jobs = pending[c0:c0 + exact_chunk]
         real_n = len(jobs)
         if real_n < exact_chunk:   # pad to a stable jit shape
             jobs = np.concatenate(
                 [jobs, np.full(exact_chunk - real_n, jobs[0], np.int64)])
-        q_n = len(jobs)
-        ok = ~batch.forb_raw[jobs][:, elab]                 # [q, E]
-        sbit = np.zeros((q_n, g.n_edges), dtype=np.int32)
-        full = np.zeros(q_n, dtype=np.int32)
-        for row, j in enumerate(jobs):
-            req = [l for l in batch.req_labels[j] if l >= 0]
-            full[row] = (1 << len(req)) - 1
-            for s, l in enumerate(req):
-                sbit[row][elab == l] = 1 << s
-        # Bloom corridor: x ∈ V_out(u) ∩ V_in(v)
-        uu, vv = batch.u[jobs], batch.v[jobs]
-        cor = np.array(
-            bitset.words_contain(index.n_out[uu][:, None, :],
-                                 vtx_packed[None, :, :]) &
-            bitset.words_contain(index.n_in[vv][:, None, :],
-                                 vtx_packed[None, :, :]))
-        cor[np.arange(q_n), vv] = True
-        cor[np.arange(q_n), uu] = True
-        reached, rounds = _exact_expand(
-            jnp.asarray(uu), jnp.asarray(vv), jnp.asarray(ok),
-            jnp.asarray(sbit), jnp.asarray(full), jnp.asarray(cor),
-            edge_src, edge_dst, v_n=g.n_vertices, n_states=n_states,
-            max_rounds=max_rounds)
-        stats.exact_rounds += int(rounds)
-        for row, j in enumerate(jobs[:real_n]):
-            if bool(reached[row]):
-                answers[batch.qid[j]] = True
+        reached, rounds = ex.run_chunk(plan_p, jobs, special)
+        stats.exact_rounds += rounds
+        hit = jobs[:real_n][reached[:real_n]]
+        np.logical_or.at(answers, plan_p.qid[hit], True)
     return answers
 
 

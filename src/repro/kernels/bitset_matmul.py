@@ -12,8 +12,12 @@ kernel runs on the VPU: each (TI, TW) tile accumulates TK selected-row ORs,
 i.e. TI·TK·TW word-ops per tile at 32 useful graph-bits per op — the
 arithmetic shape of a matmul without an MXU contraction (OR is not ⊕ the
 MXU supports).  ``repro.kernels.ops`` also exposes an MXU variant that
-unpacks to bf16 and thresholds a real matmul — §Perf in EXPERIMENTS.md
-compares the two rooflines.
+unpacks to bf16 and thresholds a real matmul — see ARCHITECTURE.md
+("Kernel lowerings") for the roofline comparison.
+
+Both the index-build closure fixpoint and the query-side product-graph
+expansion dispatch here when ``repro.core.engine`` selects the ``pallas``
+backend (interpret mode off-TPU); see ARCHITECTURE.md for the layering.
 
 Tiling: grid (M/TI, W/TW, K/TK); K is the innermost ("arbitrary") axis so
 the output tile stays resident in VMEM while adjacency/frontier tiles
@@ -31,6 +35,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 WORD = 32
+
+# jax renamed the TPU compiler-params container across releases
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or getattr(pltpu, "TPUCompilerParams"))
 
 
 def _kernel(a_ref, x_ref, o_ref, *, tk: int):
@@ -95,7 +103,7 @@ def bitset_matmul(a_packed: jax.Array, x: jax.Array, *, ti: int = 128,
         ],
         out_specs=pl.BlockSpec((ti, tw), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_pad, w_pad), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_p, x_p)

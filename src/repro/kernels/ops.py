@@ -4,14 +4,16 @@ On TPU these lower to the Pallas kernels; on CPU (this container) they run
 the kernels in ``interpret=True`` mode, or — for the big batched call sites
 where interpret-mode Python execution would dominate — the pure-jnp oracle,
 which is numerically identical.  Selection is explicit so tests can force
-either path.
+either path; ``repro.core.engine`` maps its backend choice onto these modes
+(the backend-selection contract is documented in ARCHITECTURE.md).
 
 ``frontier_step_mxu`` is the beyond-paper MXU lowering of the same semiring
-step (unpack → bf16 matmul → threshold → repack): §Perf in EXPERIMENTS.md
-compares its roofline against the VPU kernel.
+step (unpack → bf16 matmul → threshold → repack): ARCHITECTURE.md ("Kernel
+lowerings") compares its roofline against the VPU kernel.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -24,6 +26,12 @@ from .pattern_filter import way_filter
 from .popcount import popcount_rows
 
 WORD = 32
+
+# Trace-time invocation counter per kernel: incremented whenever a Pallas
+# lowering (real or interpret) is routed to, i.e. whenever the kernel ends
+# up in the compiled computation.  Tests assert on deltas to prove the
+# kernels are load-bearing for a given engine backend.
+KERNEL_INVOCATIONS: collections.Counter = collections.Counter()
 
 
 def _on_tpu() -> bool:
@@ -39,8 +47,10 @@ def frontier_step(a_packed: jax.Array, x: jax.Array, *,
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
     if mode == "pallas":
+        KERNEL_INVOCATIONS["bitset_matmul"] += 1
         return bitset_matmul(a_packed, x)
     if mode == "interpret":
+        KERNEL_INVOCATIONS["bitset_matmul"] += 1
         return bitset_matmul(a_packed, x, interpret=True)
     if mode == "mxu":
         return frontier_step_mxu(a_packed, x)
@@ -71,9 +81,11 @@ def filter_ways(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb, null_plane,
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
     if mode == "pallas":
+        KERNEL_INVOCATIONS["way_filter"] += 1
         return way_filter(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb,
                           null_plane)
     if mode == "interpret":
+        KERNEL_INVOCATIONS["way_filter"] += 1
         return way_filter(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb,
                           null_plane, interpret=True)
     if mode == "ref":

@@ -14,7 +14,7 @@ Per cell this driver:
      prefill for prefill_32k, serve_step for decode shapes),
   4. records ``memory_analysis()`` (fits-per-chip proof),
      loop-aware HLO costs (utils/hlo.py) and the three roofline terms,
-  5. dumps everything to JSON for EXPERIMENTS.md.
+  5. dumps everything to JSON for ARCHITECTURE.md.
 
 Also lowers the paper's own engine (``--arch tdr-graph``): the distributed
 TDR closure fixpoint on the full mesh.
@@ -48,11 +48,11 @@ from repro.utils import hlo as hlo_lib
 from repro.utils import roofline as roof_lib
 
 # per-arch microbatch counts for train_4k (memory lever; tuned so the
-# per-chip footprint clears 16 GB — see EXPERIMENTS.md §Dry-run)
+# per-chip footprint clears 16 GB — see ARCHITECTURE.md §Dry-run)
 # NOTE: microbatch rows (global_batch / n_micro) must stay divisible by
 # the batch-axis size (16 single-pod, 32 multi-pod) or activations lose
 # their data sharding and replicate -- measured as a 2.5x collective blow-up
-# on deepseek (EXPERIMENTS.md §Perf, iteration D1).
+# on deepseek (ARCHITECTURE.md §Perf, iteration D1).
 TRAIN_MICROBATCHES = {
     "gemma3-27b": 8, "dbrx-132b": 8, "deepseek-v2-236b": 8,
     "phi3-medium-14b": 8, "stablelm-12b": 8, "phi3-mini-3.8b": 8,
@@ -61,7 +61,7 @@ TRAIN_MICROBATCHES = {
 }
 
 # bf16 Adam moments for the 100B+ models (standard at this scale; the
-# master weights stay f32) -- EXPERIMENTS.md §Dry-run documents the choice
+# master weights stay f32) -- ARCHITECTURE.md §Dry-run documents the choice
 BF16_MOMENT_ARCHS = {"dbrx-132b", "deepseek-v2-236b"}
 
 
@@ -125,7 +125,7 @@ def input_specs(arch: str, shape_name: str, the_mesh) -> dict:
 def applicable(arch: str, shape_name: str) -> bool:
     cfg = configs.get(arch)
     if shape_name == "long_500k" and not cfg.sub_quadratic:
-        return False  # full-attention archs skip (see DESIGN.md §5)
+        return False  # full-attention archs skip (see ARCHITECTURE.md)
     return True
 
 

@@ -4,7 +4,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 chosen cells, record the roofline before/after into
 experiments/perf_iterations.json.
 
-Iterations (see EXPERIMENTS.md §Perf for the hypothesis log):
+Iterations (see ARCHITECTURE.md §Perf for the hypothesis log):
   rwkv-chunked     rwkv6-3b × train_4k with the chunked WKV6 formulation
   rwkv-chunk-mxu   + bf16 intra-chunk matmuls
   ds-micro8        deepseek-v2 × train_4k with shardable microbatches

@@ -56,7 +56,7 @@ COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 # Ops that genuinely move HBM bytes on TPU.  Pure-layout ops (reshape,
 # broadcast, transpose, iota, pad, slice, concatenate) and elementwise
 # chains fuse on TPU, so the CPU backend's standalone instances are
-# excluded -- see EXPERIMENTS.md §Roofline "methodology".
+# excluded -- see ARCHITECTURE.md §Roofline "methodology".
 _MEM_OPS = ("fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
             "reduce", "scatter", "gather", "select-and-scatter",
             "convolution") + COLLECTIVE_OPS

@@ -1,4 +1,4 @@
-"""EXPERIMENTS.md table generator.
+"""ARCHITECTURE.md table generator.
 
 Reads experiments/dryrun_{single,multi}.json (+ perf_iterations.json) and
 emits the §Dry-run / §Roofline markdown tables.  MODEL_FLOPS is recomputed

@@ -1,0 +1,98 @@
+"""Minimal stand-in for the ``hypothesis`` API this test-suite uses.
+
+Vendored so tier-1 collection and execution work on clean containers
+without hypothesis installed (``requirements-dev.txt`` installs the real
+library; when importable it is preferred — see the guarded imports in
+``test_pattern.py`` / ``test_tdr.py`` / ``test_engine.py``).
+
+Implements just what the suite needs: ``@given(*strategies, **strategies)``
+stacked with ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``booleans`` / ``sampled_from`` / ``lists`` / ``composite``
+strategies.  Examples are drawn from a fixed-seed RNG, so runs are
+deterministic (no shrinking, no database — falsifying examples are printed
+in the failure message instead).
+"""
+from __future__ import annotations
+
+import random
+
+__version__ = "0.0-minihyp"
+
+_BASE_SEED = 0x7D12
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return Strategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        """``@st.composite`` — ``fn(draw, *args, **kw)`` becomes a factory
+        returning a Strategy (supports recursive use, as in test_pattern)."""
+        def make(*args, **kwargs):
+            def draw_fn(rng):
+                def draw(strategy: Strategy):
+                    return strategy.example(rng)
+                return fn(draw, *args, **kwargs)
+            return Strategy(draw_fn)
+        return make
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._minihyp_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*pos_strats: Strategy, **kw_strats: Strategy):
+    def deco(fn):
+        cfg = getattr(fn, "_minihyp_settings", {"max_examples": 20})
+
+        def wrapper():
+            rng = random.Random(_BASE_SEED)
+            for ex in range(cfg["max_examples"]):
+                args = [s.example(rng) for s in pos_strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"minihyp: falsified on example {ex}: "
+                        f"args={args!r} kwargs={kwargs!r}: {e}") from e
+
+        # plain no-arg signature so pytest doesn't treat the strategy
+        # names as fixtures (deliberately no functools.wraps)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,0 +1,238 @@
+"""Packed-word engine: backend bit-equality, bool-plane oracle equivalence,
+planner/executor vs the DFS oracle, and kernel load-bearing-ness."""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:  # clean container: vendored fallback (see _minihyp.py)
+    import _minihyp as hp
+    st = hp.strategies
+
+import jax.numpy as jnp
+
+from repro.core import (bitset, dfs_baseline, engine, graph as G,
+                        pattern as pat, tdr_build, tdr_query)
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+BACKENDS = ("segment", "pallas")
+
+
+# ----------------------------------------------------- primitive equality
+@hp.given(seed=st.integers(0, 10_000))
+@hp.settings(max_examples=10, deadline=None)
+def test_segment_or_words_matches_bool_plane(seed):
+    rng = np.random.default_rng(seed)
+    e, nbits, s = 64, 70, 17
+    vals = rng.random((e, nbits)) < 0.15
+    seg = rng.integers(0, s, size=e)
+    want = np.asarray(bitset.pack_bits(bitset.segment_or(
+        jnp.asarray(vals), jnp.asarray(seg), num_segments=s)))
+    got = np.asarray(bitset.segment_or_words(
+        jnp.asarray(bitset.pack_bits_np(vals)), jnp.asarray(seg),
+        num_segments=s, chunk_words=1))
+    np.testing.assert_array_equal(got, want)
+
+
+@hp.given(seed=st.integers(0, 10_000), kind=st.sampled_from(["er", "pa"]))
+@hp.settings(max_examples=8, deadline=None)
+def test_engine_closure_matches_dfs_oracle(seed, kind):
+    """Both backends' packed closure == the per-vertex DFS reachable set."""
+    g = G.random_graph(kind, 40, 2.0, 4, seed=seed)
+    _, _, disc = tdr_build.dfs_intervals(g)
+    rows = tdr_build._vertex_bit_rows(CFG, disc)
+    rows_packed = jnp.asarray(bitset.pack_bits_np(rows))
+    results = {}
+    for backend in BACKENDS:
+        eng = engine.make_engine(g, backend=backend)
+        base = eng.propagate(rows_packed)
+        r, _ = eng.closure(base)
+        results[backend] = np.asarray(r)
+    np.testing.assert_array_equal(results["segment"], results["pallas"])
+    for u in range(0, g.n_vertices, 7):
+        reach = dfs_baseline.reachable_set(g, u)
+        want = np.zeros(CFG.vtx_bits, dtype=bool)
+        for v in np.flatnonzero(reach):
+            want |= rows[v]
+        got = np.unpackbits(results["segment"][u].view(np.uint8),
+                            bitorder="little")[:CFG.vtx_bits].astype(bool)
+        np.testing.assert_array_equal(got, want)
+
+
+@hp.given(seed=st.integers(0, 10_000), kind=st.sampled_from(["er", "pa"]))
+@hp.settings(max_examples=6, deadline=None)
+def test_build_index_backend_bit_equality(seed, kind):
+    g = G.random_graph(kind, 50, 2.2, 5, seed=seed)
+    idx = {b: tdr_build.build_index(g, CFG, backend=b) for b in BACKENDS}
+    for f in ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(idx["segment"], f)),
+            np.asarray(getattr(idx["pallas"], f)), err_msg=f)
+    assert idx["segment"].fixpoint_rounds == idx["pallas"].fixpoint_rounds
+
+
+# --------------------------------------------------- planner + executor
+def _random_queries(rng, g, n):
+    qs = []
+    for _ in range(n):
+        u, v = int(rng.integers(g.n_vertices)), int(rng.integers(
+            g.n_vertices))
+        kind = rng.integers(5)
+        labs = rng.choice(g.n_labels, size=min(2, g.n_labels),
+                          replace=False).tolist()
+        if kind == 0:
+            p = pat.all_of(labs)
+        elif kind == 1:
+            p = pat.any_of(labs)
+        elif kind == 2:
+            p = pat.none_of(labs)
+        elif kind == 3:
+            p = pat.parse(f"l{labs[0]} & !l{labs[-1]}")
+        else:
+            p = pat.lcr(labs, g.n_labels)
+        qs.append((u, v, p))
+    return qs
+
+
+@hp.given(seed=st.integers(0, 10_000), kind=st.sampled_from(["er", "pa"]))
+@hp.settings(max_examples=8, deadline=None)
+def test_answer_batch_matches_oracle_both_backends(seed, kind):
+    rng = np.random.default_rng(seed)
+    g = G.random_graph(kind, 40, 2.0, 4, seed=seed)
+    idx = tdr_build.build_index(g, CFG)
+    queries = _random_queries(rng, g, 20)
+    want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in queries]
+    for backend in BACKENDS:
+        got = tdr_query.answer_batch(idx, queries, backend=backend)
+        assert got.tolist() == want, backend
+
+
+def test_query_plan_is_packed_and_padded():
+    g = G.fig2_example()
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig(vtx_bits=32))
+    plan = tdr_query.compile_queries(
+        idx, [(0, 5, pat.all_of([1, 3])), (0, 4, pat.none_of([0, 1]))])
+    assert plan.req_w.dtype == np.uint32
+    assert plan.forb_raw_w.dtype == np.uint32
+    assert plan.full_mask.tolist() == [3, 0]
+    padded = plan.pad_to(16)
+    assert padded.n_jobs == 16 and padded.qid[-1] == -1
+    assert padded.n_queries == plan.n_queries
+
+
+def test_index_arrays_are_packed_words():
+    """No [V, nbits] bool plane at rest: every index array is uint32."""
+    g = G.erdos_renyi(60, 2.0, 4, seed=0)
+    idx = tdr_build.build_index(g, CFG)
+    for f in ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in"):
+        arr = getattr(idx, f)
+        assert arr.dtype == jnp.uint32, f
+    assert idx.vtx_words.dtype == np.uint32
+    assert idx.h_vtx.shape[-1] == bitset.n_words(CFG.vtx_bits)
+
+
+# ----------------------------------------------- kernels are load-bearing
+def test_pallas_backend_invokes_bitset_matmul():
+    from repro.kernels import ops
+    g = G.erdos_renyi(50, 2.5, 4, seed=7)
+
+    before = ops.KERNEL_INVOCATIONS["bitset_matmul"]
+    idx = tdr_build.build_index(g, CFG, backend="pallas")
+    after_build = ops.KERNEL_INVOCATIONS["bitset_matmul"]
+    assert after_build > before, "build fixpoint skipped the Pallas kernel"
+
+    # a query mix that cannot all be resolved by phase 1 filters
+    rng = np.random.default_rng(0)
+    queries = _random_queries(rng, g, 30)
+    stats = tdr_query.QueryStats()
+    tdr_query.answer_batch(idx, queries, backend="pallas", stats=stats)
+    after_query = ops.KERNEL_INVOCATIONS["bitset_matmul"]
+    assert stats.exact_jobs > 0, "no job reached phase 2; pick other seeds"
+    assert after_query > after_build, \
+        "exact expansion skipped the Pallas kernel"
+
+
+def test_segment_backend_uses_no_pallas_kernel():
+    from repro.kernels import ops
+    g = G.erdos_renyi(40, 2.0, 4, seed=1)
+    before = dict(ops.KERNEL_INVOCATIONS)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    tdr_query.answer_batch(
+        idx, _random_queries(np.random.default_rng(1), g, 10),
+        backend="segment")
+    assert dict(ops.KERNEL_INVOCATIONS) == before
+
+
+# ------------------------------------------------------ backend selection
+def test_backend_env_override(monkeypatch):
+    # env replaces the default resolution only ...
+    monkeypatch.setenv(engine.ENV_BACKEND, "pallas")
+    assert engine.resolve_backend("auto") == "pallas"
+    assert engine.resolve_backend("") == "pallas"
+    # ... but never an explicitly requested backend (sweeps stay truthful)
+    assert engine.resolve_backend("segment") == "segment"
+    monkeypatch.setenv(engine.ENV_BACKEND, "segment")
+    assert engine.resolve_backend("pallas") == "pallas"
+    assert engine.resolve_backend("auto") == "segment"
+    monkeypatch.delenv(engine.ENV_BACKEND)
+    assert engine.resolve_backend("auto") in BACKENDS
+    with pytest.raises(ValueError):
+        engine.resolve_backend("mxu")
+
+
+def test_pallas_auto_fallback_on_dense_cap():
+    g = G.erdos_renyi(64, 2.0, 4, seed=0)
+    with pytest.warns(UserWarning, match="falling back"):
+        eng = engine.make_engine(
+            g, config=engine.EngineConfig(backend="pallas",
+                                          max_dense_bytes=64))
+    assert eng.backend == "segment"
+
+
+def test_label_adjacency_cache_is_bounded():
+    g = G.erdos_renyi(40, 2.0, 8, seed=0)
+    eng = engine.make_engine(g, backend="pallas")
+    for l in range(8):
+        eng.label_class_adjacency((l,))
+    assert len(eng._label_adj) <= engine.Engine.LABEL_ADJ_CACHE
+
+
+def test_executor_falls_back_when_class_set_blows_cap():
+    """Per-batch label-class matrices over the dense cap must not OOM the
+    pallas backend: the batch expands via segment rounds, bit-identically."""
+    g = G.erdos_renyi(40, 2.5, 6, seed=3)
+    idx = tdr_build.build_index(g, CFG)
+    rng = np.random.default_rng(3)
+    queries = _random_queries(rng, g, 15)
+    want = tdr_query.answer_batch(idx, queries, backend="segment").tolist()
+    kw = (g.n_vertices + 31) // 32
+    cap = 2 * g.n_vertices * kw * 4   # fits the base matrix, not C+1 classes
+    cfg = engine.EngineConfig(backend="pallas", max_dense_bytes=cap)
+    with pytest.warns(UserWarning, match="segment path"):
+        got = tdr_query.answer_batch(idx, queries, engine_config=cfg)
+    assert got.tolist() == want
+
+
+def test_index_caches_engines_and_adjacency():
+    g = G.erdos_renyi(30, 2.0, 4, seed=0)
+    idx = tdr_build.build_index(g, CFG, backend="pallas")
+    assert idx.engine("pallas") is idx.engine("pallas")
+    a1 = idx.adj_packed()
+    a2 = idx.engine().adjacency()
+    # adjacency row u must contain exactly u's successors
+    adj = np.asarray(a1)
+    bits = np.unpackbits(adj.view(np.uint8), axis=1, bitorder="little")
+    for u in range(g.n_vertices):
+        np.testing.assert_array_equal(
+            np.flatnonzero(bits[u][:g.n_vertices]),
+            np.unique(g.successors(u)))
+
+
+def test_vtx_packed_cached_plainly():
+    g = G.erdos_renyi(20, 1.5, 3, seed=0)
+    idx = tdr_build.build_index(g, CFG)
+    p1 = idx.vtx_packed
+    assert idx.vtx_packed is p1                 # cached attribute, no hack
+    np.testing.assert_array_equal(
+        np.asarray(p1), bitset.pack_bits_np(idx.vtx_bit_rows))

@@ -1,7 +1,12 @@
 """Pattern AST / parser / DNF compiler tests (+ hypothesis properties)."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:  # clean container: vendored fallback (see _minihyp.py)
+    import _minihyp as hp
+    st = hp.strategies
 
 from repro.core import pattern as pat
 

@@ -1,9 +1,14 @@
 """TDR index + query engine: paper examples, oracle equivalence,
 filter soundness, distributed build (hypothesis property tests)."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:  # clean container: vendored fallback (see _minihyp.py)
+    import _minihyp as hp
+    st = hp.strategies
 
 from repro.core import (dfs_baseline, graph as G, lcr, pattern as pat,
                         tdr_build, tdr_query)

@@ -43,7 +43,22 @@ def run(scale: str = "smoke", seed: int = 0,
         else:
             def call(mode=mode):
                 return np.asarray(ops.frontier_step(ap, x, mode=mode))
-        (_, sec) = common.time_call(call, repeat=3)
+        (_, sec) = common.time_call(call, repeat=5)
         rows.append((f"kernels/frontier_step/{mode}/V{n}",
+                     round(sec * 1e6, 1), "per_round"))
+    # one fully-occupied default tile (128 rows x 128 cols x 128 words):
+    # the shape the vectorized kernel inner loop is specified against
+    tm = tk_ = 128
+    at = rng.random((tm, tk_)) < 0.05
+    apt = jnp.asarray(bitset.pack_bits_np(at))
+    xt = jnp.asarray(rng.integers(0, 2 ** 32, size=(tk_, 128),
+                                  dtype=np.uint32))
+    for mode in modes:
+        if mode == "segment":
+            continue   # edge-list reduction has no dense-tile analogue
+        def call(mode=mode):
+            return np.asarray(ops.frontier_step(apt, xt, mode=mode))
+        (_, sec) = common.time_call(call, repeat=5)
+        rows.append((f"kernels/frontier_step/{mode}/tile128",
                      round(sec * 1e6, 1), "per_round"))
     return rows

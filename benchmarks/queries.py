@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import graph as G, tdr_build
+from repro.core import graph as G, tdr_build, tdr_query
 from . import common
 
 
@@ -26,12 +26,21 @@ def run(scale: str = "smoke", seed: int = 0,
                 qs = sets[f"{fam}-{tf}"]
                 if not qs.queries:
                     continue
-                tdr_s, ok = common.time_tdr(idx, qs, backend=backend)
+                stats = tdr_query.QueryStats()
+                tdr_s, ok = common.time_tdr(idx, qs, repeat=3,
+                                            backend=backend, stats=stats)
                 dfs_s, _ = common.time_dfs(g, qs)
                 n = len(qs.queries)
                 rows.append((f"tableIII/{kind}/{fam}-{tf}",
                              round(tdr_s / n * 1e6, 1),
                              f"dfs_us={dfs_s / n * 1e6:.1f};"
                              f"speedup={dfs_s / max(tdr_s, 1e-9):.1f}x;"
-                             f"correct={ok}"))
+                             f"correct={ok}",
+                             {"rounds": stats.exact_rounds,
+                              "corridor_occ": round(
+                                  stats.corridor_occupancy, 3),
+                              "phase1_us": round(
+                                  stats.phase1_s / n * 1e6, 1),
+                              "phase2_us": round(
+                                  stats.phase2_s / n * 1e6, 1)}))
     return rows

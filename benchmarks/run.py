@@ -8,8 +8,12 @@ launch/dryrun.py, not from here).
 ``--backends segment,pallas`` sweeps the packed-word engine backends for
 the modules that support it (queries, kernels); ``--json PATH`` addition-
 ally writes machine-readable per-row records
-``{name, us_per_call, derived, backend, scale}`` so the perf trajectory is
-tracked across PRs (see BENCH_queries.json at the repo root).
+``{name, us_per_call, derived, backend, scale}`` — tableIII rows also
+carry the executor counters ``rounds``, ``corridor_occ`` (mean |V'|/V of
+the corridor-compacted expansion), and the ``phase1_us``/``phase2_us``
+wall split — so the perf trajectory is tracked across PRs (see
+BENCH_queries.json at the repo root; ``benchmarks.guard`` is the CI
+regression gate over those rows).
 """
 from __future__ import annotations
 
@@ -55,13 +59,18 @@ def collect(scale: str, only: str = "", backends: list | None = None) -> list:
             except Exception as e:  # noqa
                 rows = [(f"{name}/ERROR", 0, repr(e)[:120])]
             for row in rows:
-                records.append({
+                rec = {
                     "name": row[0],
                     "us_per_call": row[1],
                     "derived": row[2] if len(row) > 2 else "",
                     "backend": label if supports else "n/a",
                     "scale": scale,
-                })
+                }
+                if len(row) > 3 and isinstance(row[3], dict):
+                    # executor counters (rounds, corridor occupancy,
+                    # phase-1/phase-2 split) ride along per row
+                    rec.update(row[3])
+                records.append(rec)
     return records
 
 

@@ -31,8 +31,9 @@ for i in range(100):
          pattern.parse(f"(l{labs[0]} | l{labs[1]}) & !l{labs[2]}")][i % 4]
     queries.append((u, v, p))
 
-# warm up jit once so timings reflect steady-state answering
-tdr_query.answer_batch(idx, queries[:4])
+# warm up jit once so timings reflect steady-state answering (the full
+# set, so the corridor-compacted executor's chunk-shape buckets compile)
+tdr_query.answer_batch(idx, queries)
 stats = tdr_query.QueryStats()
 t0 = time.time()
 ans = tdr_query.answer_batch(idx, queries, stats=stats)

@@ -131,6 +131,11 @@ def or_reduce(words: jax.Array, axis: int) -> jax.Array:
                           (axis % words.ndim,))
 
 
+def full_words_where(cond: jax.Array) -> jax.Array:
+    """Broadcast a boolean mask to all-ones/all-zeros uint32 words."""
+    return jnp.where(cond, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+
+
 def words_contain(a: jax.Array, b: jax.Array) -> jax.Array:
     """``b ⊆ a`` elementwise over trailing word axis -> bool [...]."""
     return jnp.all((a & b) == b, axis=-1)

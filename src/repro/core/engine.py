@@ -96,26 +96,36 @@ def pack_adjacency_np(graph: Graph, *, reverse: bool = False) -> np.ndarray:
     return a
 
 
-def pack_label_class_adjacency_np(graph: Graph, special_labels,
-                                  *, reverse: bool = True) -> np.ndarray:
-    """Per-label-class packed adjacency ``[C+1, V, ceil(V/32)]``.
+def pack_label_class_edges_np(src: np.ndarray, dst: np.ndarray,
+                              labels: np.ndarray, n_vertices: int,
+                              special_labels, *,
+                              reverse: bool = True) -> np.ndarray:
+    """Per-label-class packed adjacency ``[C+1, V, ceil(V/32)]`` from raw
+    edge arrays (used for per-chunk corridor-compacted subgraphs as well
+    as the whole graph).
 
     One bit-matrix per *special* label (labels that some pending query
     requires or forbids) plus a final **neutral** class OR-ing every edge
     whose label is special for nobody — those edges behave identically for
     all queries (always allowed, subset-bit 0), so one matmul covers them.
     """
-    v_n = graph.n_vertices
-    kw = bitset.n_words(v_n)
+    kw = bitset.n_words(n_vertices)
     special = list(special_labels)
-    out = np.zeros((len(special) + 1, v_n, kw), dtype=np.uint32)
-    src, dst = graph.src, graph.indices
+    out = np.zeros((len(special) + 1, n_vertices, kw), dtype=np.uint32)
     rows, cols = (dst, src) if reverse else (src, dst)
-    cls = np.full(graph.n_edges, len(special), dtype=np.int64)
+    cls = np.full(labels.shape[0], len(special), dtype=np.int64)
     for i, l in enumerate(special):
-        cls[graph.labels == l] = i
+        cls[labels == l] = i
     bitset.set_bits_np(out, (cls, rows), cols)
     return out
+
+
+def pack_label_class_adjacency_np(graph: Graph, special_labels,
+                                  *, reverse: bool = True) -> np.ndarray:
+    """Whole-graph wrapper over ``pack_label_class_edges_np``."""
+    return pack_label_class_edges_np(graph.src, graph.indices, graph.labels,
+                                     graph.n_vertices, special_labels,
+                                     reverse=reverse)
 
 
 # --------------------------------------------------------- jitted closures
@@ -126,27 +136,25 @@ def _closure_segment(base: jax.Array, gather_idx: jax.Array,
                      chunk_words: int, max_iters: int):
     """lfp(R = base ∨ OR_{(a,b)} R[b]) via packed segment reductions."""
 
-    def round_(r):
-        upd = bitset.segment_or_words(r[gather_idx], scatter_idx,
-                                      num_segments=num_segments,
-                                      chunk_words=chunk_words)
-        return r | upd
-
     def cond(state):
         _, changed, it = state
         return jnp.logical_and(changed, it < max_iters)
 
     def body(state):
         r, _, it = state
-        nr = round_(r)
-        return nr, jnp.any(nr != r), it + 1
+        upd = bitset.segment_or_words(r[gather_idx], scatter_idx,
+                                      num_segments=num_segments,
+                                      chunk_words=chunk_words)
+        new = upd & ~r   # the changed flag falls out of the round's own OR
+        return r | new, jnp.any(new != 0), it + 1
 
     r, _, rounds = jax.lax.while_loop(cond, body,
                                       (base, jnp.bool_(True), jnp.int32(0)))
     return r, rounds
 
 
-def _matmul_rows(adj: jax.Array, x: jax.Array, mode: str) -> jax.Array:
+def _matmul_rows(adj: jax.Array, x: jax.Array, mode: str,
+                 tiles: tuple[int, int, int] | None = None) -> jax.Array:
     """``OR_j adj[i,j] & x[j]`` with x's row count padded to adj's bit width
     (the packed adjacency is word-aligned: K = ceil(V/32)*32 >= V)."""
     from repro.kernels import ops  # deferred: kernels import repro.core
@@ -154,7 +162,7 @@ def _matmul_rows(adj: jax.Array, x: jax.Array, mode: str) -> jax.Array:
     if x.shape[0] < k:
         x = jnp.concatenate(
             [x, jnp.zeros((k - x.shape[0],) + x.shape[1:], x.dtype)], axis=0)
-    return ops.frontier_step(adj, x, mode=mode)
+    return ops.frontier_step(adj, x, mode=mode, tiles=tiles)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "mode"))
@@ -162,17 +170,15 @@ def _closure_matmul(base: jax.Array, adj: jax.Array, *, max_iters: int,
                     mode: str):
     """Same fixpoint with rounds routed through ``kernels.bitset_matmul``."""
 
-    def round_(r):
-        return r | _matmul_rows(adj, r, mode)
-
     def cond(state):
         _, changed, it = state
         return jnp.logical_and(changed, it < max_iters)
 
     def body(state):
         r, _, it = state
-        nr = round_(r)
-        return nr, jnp.any(nr != r), it + 1
+        upd = _matmul_rows(adj, r, mode)
+        new = upd & ~r   # the changed flag falls out of the round's own OR
+        return r | new, jnp.any(new != 0), it + 1
 
     r, _, rounds = jax.lax.while_loop(cond, body,
                                       (base, jnp.bool_(True), jnp.int32(0)))
@@ -237,16 +243,23 @@ class Engine:
                 pack_adjacency_np(self.graph, reverse=reverse))
         return self._adj[reverse]
 
-    def label_class_adjacency(self, special_labels) -> jax.Array:
-        """Per-label-class reverse adjacency ``[C+1, V, Kw]`` (LRU-cached)."""
-        key = tuple(sorted(set(int(l) for l in special_labels)))
+    def label_class_adjacency(self, special_labels, *,
+                              reverse: bool = True) -> jax.Array:
+        """Per-label-class adjacency ``[C+1, V, Kw]`` (LRU-cached).
+
+        ``reverse=True`` (bit j of row i == edge j→i) drives forward
+        frontier expansion; ``reverse=False`` drives the backward frontier
+        of the bidirectional executor."""
+        labels = tuple(sorted(set(int(l) for l in special_labels)))
+        key = (labels, reverse)
         if key in self._label_adj:
             self._label_adj[key] = self._label_adj.pop(key)  # refresh LRU
         else:
             while len(self._label_adj) >= self.LABEL_ADJ_CACHE:
                 self._label_adj.pop(next(iter(self._label_adj)))
             self._label_adj[key] = jnp.asarray(
-                pack_label_class_adjacency_np(self.graph, key, reverse=True))
+                pack_label_class_adjacency_np(self.graph, labels,
+                                              reverse=reverse))
         return self._label_adj[key]
 
     # ---------------------------------------------------------- primitives

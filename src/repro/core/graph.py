@@ -72,6 +72,107 @@ class Graph:
                      dst.astype(np.int32), lab.astype(np.int32))
 
 
+# ------------------------------------------------- subgraph/layout helpers
+def pad_pow2(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= max(n, lo) (stable-shape bucketing)."""
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def pad_bucket(n: int, lo: int = 1) -> int:
+    """Smallest value >= max(n, lo) on the {2^k, 3·2^(k-1)} grid
+    (powers of two plus midpoints: 32, 48, 64, 96, 128, ...).
+
+    Halves the worst-case padding of pure pow2 buckets — decisive for
+    corridor compaction, where a union just over V/2 must not round up
+    past V — while keeping the distinct-jit-shape count logarithmic."""
+    p = lo
+    while p < n:
+        q = p + p // 2
+        if q >= n and q > p:
+            return q
+        p *= 2
+    return p
+
+
+def induced_edges(graph: Graph, active: np.ndarray, src: np.ndarray | None
+                  = None) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray, np.ndarray]:
+    """Renumbered edge list of the subgraph induced by ``active`` (bool [V]).
+
+    Returns ``(sub_ids, renum, sub_src, sub_dst, sub_lab)``: the active
+    vertex ids, the V-sized old->new map (-1 outside), and the edges whose
+    endpoints both lie in the active set, renumbered.  ``src`` lets callers
+    pass a cached expanded source array (``graph.src`` rebuilds it)."""
+    sub_ids = np.flatnonzero(active).astype(np.int32)
+    renum = np.full(graph.n_vertices, -1, dtype=np.int32)
+    renum[sub_ids] = np.arange(sub_ids.shape[0], dtype=np.int32)
+    s = graph.src if src is None else src
+    keep = active[s] & active[graph.indices]
+    return (sub_ids, renum, renum[s[keep]], renum[graph.indices[keep]],
+            graph.labels[keep])
+
+
+def padded_incidence(keys: np.ndarray, n_segments: int, sentinel: int,
+                     lo: int = 8) -> np.ndarray:
+    """Group edge indices by ``keys`` into a padded ``[n_segments, D]``
+    gather matrix (D = max group size rounded to a power of two; empty
+    slots hold ``sentinel``).
+
+    This converts a scatter-reduce (segment OR) into a dense gather +
+    OR-reduce: callers append one zero row at index ``sentinel`` to the
+    per-edge value array so padding slots contribute nothing."""
+    e_n = int(keys.shape[0])
+    counts = np.bincount(keys, minlength=n_segments) if e_n else np.zeros(
+        n_segments, dtype=np.int64)
+    d = int(counts.max()) if e_n else 0
+    ids = np.full((n_segments, pad_bucket(max(d, 1), lo)), sentinel,
+                  dtype=np.int32)
+    if e_n:
+        order = np.argsort(keys, kind="stable").astype(np.int32)
+        sk = keys[order]
+        pos = np.arange(e_n) - np.repeat(np.cumsum(counts) - counts, counts)
+        ids[sk, pos] = order
+    return ids
+
+
+def incidence_plan(keys: np.ndarray, n_segments: int, sentinel: int,
+                   cap: int = 16, lo: int = 8) -> tuple:
+    """One- or two-level padded incidence, chosen by degree skew.
+
+    Low skew -> ``(ids,)`` as from ``padded_incidence``.  With a heavy
+    tail (padded width > 2*cap) a single level would pay max-degree
+    padding on *every* segment, so groups are split into virtual rows of
+    at most ``cap`` edges: ``(ids1 [n_virt, cap], ids2 [n_segments, D2])``
+    — reduce the per-edge values by ``ids1``, then the virtual rows by
+    ``ids2``.  ``n_virt`` is padded to a power of two with at least one
+    all-``sentinel`` row, so the reduced virtual rows end with a zero row
+    that ``ids2``'s padding can safely point at."""
+    e_n = int(keys.shape[0])
+    counts = np.bincount(keys, minlength=n_segments) if e_n else np.zeros(
+        n_segments, dtype=np.int64)
+    d = int(counts.max()) if e_n else 0
+    if pad_bucket(max(d, 1), lo) <= 2 * cap:
+        return (padded_incidence(keys, n_segments, sentinel, lo),)
+    ngrp = np.maximum(1, -(-counts // cap))
+    n_virt = int(ngrp.sum())
+    base = np.cumsum(ngrp) - ngrp
+    ids1 = np.full((pad_bucket(n_virt + 1, lo), cap), sentinel,
+                   dtype=np.int32)
+    order = np.argsort(keys, kind="stable").astype(np.int32)
+    sk = keys[order]
+    pos = np.arange(e_n) - np.repeat(np.cumsum(counts) - counts, counts)
+    ids1[base[sk] + pos // cap, pos % cap] = order
+    d2 = pad_bucket(int(ngrp.max()), 2)
+    ids2 = np.full((n_segments, d2), n_virt, dtype=np.int32)
+    grp = np.repeat(np.arange(n_segments), ngrp)
+    gpos = np.arange(n_virt) - np.repeat(base, ngrp)
+    ids2[grp, gpos] = np.arange(n_virt, dtype=np.int32)
+    return (ids1, ids2)
+
+
 # -------------------------------------------------------------- generators
 def erdos_renyi(n_vertices: int, avg_degree: float, n_labels: int,
                 seed: int = 0) -> Graph:

@@ -20,24 +20,50 @@ Phase 1 — *filter cascade* (pure index math, no traversal):
     Pallas cascade on TPU / ref oracle elsewhere); no surviving way -> FALSE
   * everything else -> UNKNOWN, goes to phase 2.
 
-Phase 2 — *exact product-graph expansion* for survivors only, run by a
-persistent jitted executor.  The frontier is a ``[V, Q]`` array of packed
-state-subset bitfields (bit s of word (x, q) == "query q can stand at x
-having seen required-subset s"); one round is the engine's OR-semiring
-propagate with per-edge state transitions done as constant-mask shifts on
-the packed field, confined to the Bloom *corridor* ``V_out(u) ∩ V_in(v)``
-(packed).  With the ``pallas`` backend a round is one
-``kernels.bitset_matmul`` per label class (per special label + one matrix
-for all neutral labels).  The expansion is the same boolean-semiring
-product the index build uses, so answers are exact: property tests assert
-bit-equality with the DFS oracle.
+Phase 2 — *corridor-compacted bidirectional expansion* for survivors only.
+The paper's two-dimensional filters confine any u→v path to the Bloom
+corridor ``V_out(u) ∩ V_in(v)``; the executor turns that pruning into a
+*compute* restriction, not just an output mask:
+
+  * **Compaction** — per job chunk (32 queries wide by default), the
+    corridor rows are unioned into an active vertex set, renumbered
+    into an induced subgraph (edge lists / padded-incidence gather
+    matrices for the segment backend, packed per-label-class
+    sub-adjacency bit-matrices for the ``pallas`` backend).  ``|V'|``
+    and ``|E'|`` are padded to ``{2^k, 3·2^(k-1)}`` buckets so jit
+    shapes stay stable and recompiles stay bounded; when the corridor
+    is near-total the chunk runs on cached full-graph operands instead
+    (corridor mask built on device, no host membership round-trip).
+  * **Bidirectional meet-in-the-middle** — a forward frontier of
+    seen-subset states expands from ``u`` while a backward frontier of
+    states co-reachable to ``v`` expands from ``v``, both as ``[V', Q]``
+    packed state-subset bitfields (bit s of word (x, q) == "query q can
+    stand at x having seen required-subset s" / "can reach v collecting
+    s").  A query finishes as soon as some vertex holds forward state s₁
+    and backward state s₂ with ``s₁ | s₂ == full_mask`` — roughly half
+    the rounds of one-directional expansion.  Finished queries' columns
+    are frozen by a per-query done mask, and the fixpoint's ``changed``
+    flag falls out of the round's own new-bit computation (``upd & ~f``)
+    instead of a second full-frontier compare.
+  * One round is a packed gather + per-edge constant-mask-shift subset
+    transition + OR-reduction over padded in/out-incidence (segment
+    backend), or one ``kernels.bitset_matmul`` per label class per
+    direction (``pallas`` backend).
+
+The expansion is the same boolean-semiring product the index build uses
+and the corridor is sound (every vertex of a u→v path lies in it), so
+answers stay exact: property tests assert bit-equality with the DFS
+oracle and with the retained PR-1 full-graph executor (``exact_mode=
+"legacy"``).  Chunks are dispatched without host syncs and collected
+once at the end; ``QueryStats`` fetches round counters lazily.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
-from typing import Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -45,12 +71,15 @@ import numpy as np
 
 from . import bitset
 from . import engine as engine_mod
+from . import graph as graph_mod
 from . import pattern as pat
 from .tdr_build import TDRIndex, _null_words
 
 FALSE, TRUE, UNKNOWN = 0, 1, 2
 
 _FULL = jnp.uint32(0xFFFFFFFF)
+
+EXACT_MODES = ("auto", "compact", "full", "legacy")
 
 
 # ------------------------------------------------------------------ plans
@@ -108,7 +137,25 @@ class QueryStats:
     filter_false: int = 0
     filter_true: int = 0
     exact_jobs: int = 0
-    exact_rounds: int = 0
+    corridor_active: int = 0   # Σ |V'| over dispatched phase-2 chunks
+    corridor_total: int = 0    # Σ |V|  over dispatched phase-2 chunks
+    phase1_s: float = 0.0      # planner + filter cascade wall time
+    phase2_s: float = 0.0      # exact expansion wall time (incl. collect)
+    # device round counters, fetched lazily on first .exact_rounds access
+    # so dispatching chunks never blocks on a per-chunk host sync
+    _round_parts: list = dataclasses.field(default_factory=list, repr=False)
+
+    @property
+    def exact_rounds(self) -> int:
+        self._round_parts[:] = [int(r) for r in self._round_parts]
+        return sum(self._round_parts)
+
+    @property
+    def corridor_occupancy(self) -> float:
+        """Mean |V'|/|V| over phase-2 chunks (1.0 when nothing compacted)."""
+        if not self.corridor_total:
+            return 1.0
+        return self.corridor_active / self.corridor_total
 
 
 def compile_queries(index: TDRIndex,
@@ -217,12 +264,22 @@ def _filter_cascade(u, v, req_w, forb_w, null_w,
 # ----------------------------------------------------------- phase 2 (jit)
 def _state_has_masks(n_states: int, max_m: int) -> np.ndarray:
     """HAS[i] = packed mask of subset-states whose bit i is set."""
-    has = np.zeros(max_m, dtype=np.uint32)
+    has = np.zeros(max(max_m, 1), dtype=np.uint32)
     for i in range(max_m):
         for s in range(n_states):
             if (s >> i) & 1:
                 has[i] |= np.uint32(1) << np.uint32(s)
     return has
+
+
+def _sup_table(n_states: int) -> np.ndarray:
+    """SUP[t] = packed mask of subset-states s with ``s ⊇ t``."""
+    sup = np.zeros(n_states, dtype=np.uint32)
+    for t in range(n_states):
+        for s in range(n_states):
+            if s & t == t:
+                sup[t] |= np.uint32(1) << np.uint32(s)
+    return sup
 
 
 def _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed):
@@ -233,7 +290,41 @@ def _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed):
            bitset.words_contain(n_in_v[:, None, :], vtx_packed[None, :, :]))
     cor = cor.at[jnp.arange(q_n), v].set(True)
     cor = cor.at[jnp.arange(q_n), u].set(True)
-    return jnp.where(cor.T, _FULL, jnp.uint32(0))        # [V, Q]
+    return bitset.full_words_where(cor.T)                # [V, Q]
+
+
+class PlanDevice(NamedTuple):
+    """Device-resident mirror of the plan's job-axis arrays — transferred
+    once per batch; chunks ship only their job-id rows and gather in-jit.
+    (A NamedTuple so jit treats it as a pytree of arrays.)"""
+    u: Any
+    v: Any
+    req_labels: Any
+    forb_raw_w: Any
+    full_mask: Any
+
+
+@jax.jit
+def _corridor_member(jobs, plan_u, plan_v, n_out, n_in, vtx_packed):
+    """Corridor membership bool [J, V] (endpoints always members)."""
+    u, v = plan_u[jobs], plan_v[jobs]
+    mem = (bitset.words_contain(n_out[u][:, None, :], vtx_packed[None, :, :])
+           & bitset.words_contain(n_in[v][:, None, :],
+                                  vtx_packed[None, :, :]))
+    iota = jnp.arange(u.shape[0])
+    return mem.at[iota, v].set(True).at[iota, u].set(True)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _corridor_chunk_counts(jobs, plan_u, plan_v, n_out, n_in, vtx_packed,
+                           *, chunk: int):
+    """Exact per-chunk corridor-*union* size int32 [J/chunk] (the
+    compaction probe: one tiny transfer instead of shipping [J, V]
+    membership to the host; per-job sums would badly over-estimate the
+    union when corridors overlap)."""
+    mem = _corridor_member(jobs, plan_u, plan_v, n_out, n_in, vtx_packed)
+    union = mem.reshape(-1, chunk, mem.shape[1]).any(axis=1)
+    return union.sum(axis=1, dtype=jnp.int32)
 
 
 def _transition(val, has, sh):
@@ -245,9 +336,240 @@ def _transition(val, has, sh):
     return (val & has) | ((val & ~has) << sh)
 
 
-def _expand_loop(f0, round_, v, full_mask, max_rounds):
-    """Shared fixpoint driver: iterate ``round_`` until every query's target
-    state bit is set, nothing changes, or ``max_rounds`` is hit."""
+def _edge_state_masks(lab, req_labels, forb_raw_w, n_states: int, max_m: int,
+                      neutral=None):
+    """Per-(edge|class, query) transition operands ``(allow, has, sh)``.
+
+    ``lab`` is the per-edge (or per-label-class) raw label id; ``neutral``
+    marks class rows that merge all labels special for nobody (always
+    allowed, identity transition).  The forbid test reads the *raw* packed
+    forbidden rows — slot hashing may collide and the exact phase must not
+    over-forbid."""
+    q_n = req_labels.shape[0]
+    labx = jnp.maximum(lab, 0)
+    okbit = (forb_raw_w[:, labx >> 5] >>
+             (labx & 31).astype(jnp.uint32)[None, :]) & 1       # [Q, E|C]
+    allow_b = okbit == 0
+    if neutral is not None:
+        allow_b = neutral[None, :] | allow_b
+    allow = bitset.full_words_where(allow_b).T                  # [E|C, Q]
+    has_c = _state_has_masks(n_states, max_m)
+    has = jnp.full((lab.shape[0], q_n), _FULL, jnp.uint32)
+    sh = jnp.zeros((lab.shape[0], q_n), jnp.uint32)
+    for i in range(max_m):  # static unroll; require-sets hold distinct labels
+        match = req_labels[:, i][None, :] == lab[:, None]
+        if neutral is not None:
+            match = match & ~neutral[:, None]
+        has = jnp.where(match, jnp.uint32(has_c[i]), has)
+        sh = jnp.where(match, jnp.uint32(1 << i), sh)
+    return allow, has, sh
+
+
+def _sup_need(full_mask, n_states: int):
+    """sup_need[s1, q] = packed mask of backward states completing s1 to
+    ``full_mask[q]`` (s2 with ``s1 | s2 ⊇ full``)."""
+    sup = jnp.asarray(_sup_table(n_states))
+    rows = [sup[full_mask & ((n_states - 1) & ~s1)]
+            for s1 in range(n_states)]
+    return jnp.stack(rows)                                      # [S, Q]
+
+
+def _meet(f, b, sup_need):
+    """done[q] = ∃ vertex x, states s1 ∈ f[x,q], s2 ∈ b[x,q] with
+    ``s1 | s2 == full_mask[q]`` (the bidirectional termination test)."""
+    n_states = sup_need.shape[0]
+    shifts = jnp.arange(n_states, dtype=jnp.uint32)
+    fb = (f[None, :, :] >> shifts[:, None, None]) & jnp.uint32(1)  # [S,V,Q]
+    hit = (b[None, :, :] & sup_need[:, None, :]) != 0
+    return jnp.any((fb != 0) & hit, axis=(0, 1))
+
+
+def _bidi_loop(f0, b0, push_f, push_b, cor_w, sup_need, max_rounds: int):
+    """Alternating bidirectional fixpoint.  One iteration = one forward +
+    one backward expansion; a query's columns freeze once it meets, and
+    ``changed`` is derived from the rounds' own new bits (``upd & ~f``) —
+    no second full-frontier compare."""
+
+    def cond(st):
+        _, _, done, (cf, cb), it = st
+        return (cf | cb) & ~jnp.all(done) & (it < max_rounds)
+
+    def body(st):
+        f, b, done, (cf, cb), it = st
+        mask = cor_w & bitset.full_words_where(~done)[None, :]
+        # a direction whose last push added nothing is at its fixpoint
+        # (monotone, and the live mask only shrinks) — skip its push
+        new_f = jax.lax.cond(cf, lambda a: push_f(a) & mask & ~a,
+                             jnp.zeros_like, f)
+        f = f | new_f
+        new_b = jax.lax.cond(cb, lambda a: push_b(a) & mask & ~a,
+                             jnp.zeros_like, b)
+        b = b | new_b
+        done = done | _meet(f, b, sup_need)
+        return (f, b, done,
+                (jnp.any(new_f != 0), jnp.any(new_b != 0)), it + 1)
+
+    st0 = (f0, b0, _meet(f0, b0, sup_need),
+           (jnp.bool_(True), jnp.bool_(True)), jnp.int32(0))
+    _, _, done, _, rounds = jax.lax.while_loop(cond, body, st0)
+    return done, rounds
+
+
+def _bidi_segment_core(su, sv, req_labels, forb_raw_w, full_mask, cor_w,
+                       sub_lab, sub_src, sub_dst, ids_in, ids_out,
+                       n_states: int, max_m: int, max_rounds: int,
+                       chunk_words: int):
+    """Segment-backend bidirectional fixpoint over a (sub)graph's edge
+    lists.  ``ids_in`` / ``ids_out`` are padded incidence gather matrices
+    (edge ids grouped by dst / src, ``E'`` = sentinel pointing at an
+    appended zero row) — when they are ``None`` the OR-reduction falls
+    back to packed segment reductions (hub-skewed graphs where padding
+    would blow the cap)."""
+    q_n = su.shape[0]
+    v_p = cor_w.shape[0]
+    allow, has, sh = _edge_state_masks(sub_lab, req_labels, forb_raw_w,
+                                       n_states, max_m)
+    sup_need = _sup_need(full_mask, n_states)
+    iota = jnp.arange(q_n)
+    f0 = jnp.zeros((v_p, q_n), jnp.uint32).at[su, iota].set(jnp.uint32(1))
+    b0 = jnp.zeros((v_p, q_n), jnp.uint32).at[sv, iota].set(jnp.uint32(1))
+
+    def reduce_cols(val, ids):
+        # per-incidence-column gathers accumulate without the [V', D, Q]
+        # transient a single 3D gather would materialize (3× faster on CPU)
+        out = val[ids[:, 0]]
+        for j in range(1, ids.shape[1]):  # static unroll over D columns
+            out = out | val[ids[:, j]]
+        return out
+
+    def push(frontier, gather_idx, ids, scatter_idx):
+        val = _transition(frontier[gather_idx] & allow, has, sh)  # [E', Q]
+        if ids is None:
+            return bitset.segment_or_words(val, scatter_idx,
+                                           num_segments=v_p,
+                                           chunk_words=chunk_words)
+        val = jnp.concatenate(
+            [val, jnp.zeros((1, q_n), jnp.uint32)], axis=0)
+        for level in ids:   # 1 level, or virtual-row split on heavy tails
+            val = reduce_cols(val, level)
+        return val                                               # [V', Q]
+
+    return _bidi_loop(
+        f0, b0,
+        lambda f: push(f, sub_src, ids_in, sub_dst),
+        lambda b: push(b, sub_dst, ids_out, sub_src),
+        cor_w, sup_need, max_rounds)
+
+
+def _job_rows(jobs, dev: PlanDevice, m_eff: int):
+    """Gather a chunk's plan rows on device (jobs is the only transfer)."""
+    return (dev.req_labels[jobs][:, :m_eff], dev.forb_raw_w[jobs],
+            dev.full_mask[jobs])
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_m",
+                                             "max_rounds", "chunk_words"))
+def _expand_bidi(jobs, dev, su, sv, cor, sub_lab, sub_src, sub_dst,
+                 ids_in, ids_out, *, n_states: int, max_m: int,
+                 max_rounds: int, chunk_words: int):
+    """Compacted-subgraph entry: ``cor`` is the per-query corridor
+    membership bool [V', Q] extracted on the host during compaction;
+    ``su``/``sv`` are the renumbered endpoints."""
+    req_labels, forb_raw_w, full_mask = _job_rows(jobs, dev, max_m)
+    return _bidi_segment_core(
+        su, sv, req_labels, forb_raw_w, full_mask,
+        bitset.full_words_where(cor), sub_lab, sub_src, sub_dst,
+        ids_in, ids_out, n_states, max_m, max_rounds, chunk_words)
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_m",
+                                             "max_rounds", "chunk_words"))
+def _expand_bidi_full(jobs, dev, n_out, n_in, vtx_packed, sub_lab,
+                      sub_src, sub_dst, ids_in, ids_out, *, n_states: int,
+                      max_m: int, max_rounds: int, chunk_words: int):
+    """Full-graph entry for near-total corridors: endpoints and corridor
+    mask both derived on device — no host membership round-trip."""
+    req_labels, forb_raw_w, full_mask = _job_rows(jobs, dev, max_m)
+    u, v = dev.u[jobs], dev.v[jobs]
+    cor_w = _corridor_mask(u, v, n_out[u], n_in[v], vtx_packed)
+    return _bidi_segment_core(
+        u, v, req_labels, forb_raw_w, full_mask, cor_w, sub_lab,
+        sub_src, sub_dst, ids_in, ids_out, n_states, max_m, max_rounds,
+        chunk_words)
+
+
+def _bidi_matmul_core(su, sv, adj_rev, adj_fwd, class_label, req_labels,
+                      forb_raw_w, full_mask, cor_w, n_states: int,
+                      max_m: int, max_rounds: int, mode: str):
+    """Pallas-backend bidirectional fixpoint: one ``bitset_matmul`` per
+    label class per direction per round, on packed (sub-)adjacency
+    bit-matrices (forward frontier uses the reverse matrices, backward the
+    forward ones)."""
+    q_n = su.shape[0]
+    v_p = cor_w.shape[0]
+    neutral = class_label < 0
+    allow, has, sh = _edge_state_masks(class_label, req_labels, forb_raw_w,
+                                       n_states, max_m, neutral=neutral)
+    sup_need = _sup_need(full_mask, n_states)
+    iota = jnp.arange(q_n)
+    f0 = jnp.zeros((v_p, q_n), jnp.uint32).at[su, iota].set(jnp.uint32(1))
+    b0 = jnp.zeros((v_p, q_n), jnp.uint32).at[sv, iota].set(jnp.uint32(1))
+
+    def push(frontier, adj_set):
+        # scan (not unroll) over label classes: one kernel call *site* per
+        # direction keeps the while-loop body's XLA program small — an
+        # unrolled 2·(C+1) pallas calls per round made compiles explode
+        def body(upd, operand):
+            adj_c, allow_c, has_c, sh_c = operand
+            y = engine_mod._matmul_rows(adj_c, frontier, mode)[:v_p]
+            return upd | _transition(y & allow_c[None, :],
+                                     has_c[None, :], sh_c[None, :]), None
+        upd, _ = jax.lax.scan(body, jnp.zeros_like(frontier),
+                              (adj_set, allow, has, sh))
+        return upd
+
+    return _bidi_loop(
+        f0, b0,
+        lambda f: push(f, adj_rev),
+        lambda b: push(b, adj_fwd),
+        cor_w, sup_need, max_rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_m",
+                                             "max_rounds", "mode"))
+def _expand_bidi_matmul(jobs, dev, su, sv, adj_rev, adj_fwd, class_label,
+                        cor, *, n_states: int, max_m: int, max_rounds: int,
+                        mode: str):
+    """Compacted-subgraph entry (``cor`` = membership bool [V', Q])."""
+    req_labels, forb_raw_w, full_mask = _job_rows(jobs, dev, max_m)
+    return _bidi_matmul_core(
+        su, sv, adj_rev, adj_fwd, class_label, req_labels, forb_raw_w,
+        full_mask, bitset.full_words_where(cor), n_states, max_m,
+        max_rounds, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_m",
+                                             "max_rounds", "mode"))
+def _expand_bidi_matmul_full(jobs, dev, adj_rev, adj_fwd, class_label,
+                             n_out, n_in, vtx_packed, *, n_states: int,
+                             max_m: int, max_rounds: int, mode: str):
+    """Full-graph entry: corridor mask built on device from the Blooms."""
+    req_labels, forb_raw_w, full_mask = _job_rows(jobs, dev, max_m)
+    u, v = dev.u[jobs], dev.v[jobs]
+    cor_w = _corridor_mask(u, v, n_out[u], n_in[v], vtx_packed)
+    return _bidi_matmul_core(
+        su=u, sv=v, adj_rev=adj_rev, adj_fwd=adj_fwd,
+        class_label=class_label, req_labels=req_labels,
+        forb_raw_w=forb_raw_w, full_mask=full_mask, cor_w=cor_w,
+        n_states=n_states, max_m=max_m, max_rounds=max_rounds, mode=mode)
+
+
+# ------------------------------------------------- legacy (PR-1) executors
+def _expand_loop(f0, upd_of, v, full_mask, max_rounds):
+    """One-directional fixpoint driver (retained full-V path): iterate
+    until every query's target state bit is set, nothing changes, or
+    ``max_rounds`` is hit.  Finished queries' columns freeze and the
+    ``changed`` flag is derived from the round's own new bits."""
     q_n = v.shape[0]
 
     def done_of(f):
@@ -255,20 +577,19 @@ def _expand_loop(f0, round_, v, full_mask, max_rounds):
                 full_mask.astype(jnp.uint32)) & 1 == 1
 
     def cond(state):
-        f, prev_f, it, _ = state
-        changed = jnp.any(f != prev_f)
-        return jnp.logical_and(changed, jnp.logical_and(
-            ~jnp.all(done_of(f)), it < max_rounds))
+        _, done, changed, it = state
+        return changed & ~jnp.all(done) & (it < max_rounds)
 
     def body(state):
-        f, _, it, _ = state
-        nf = round_(f)
-        return nf, f, it + 1, done_of(nf)
+        f, done, _, it = state
+        live = bitset.full_words_where(~done)[None, :]
+        new = upd_of(f) & ~f & live
+        f = f | new
+        return f, done | done_of(f), jnp.any(new != 0), it + 1
 
-    f1 = round_(f0)
-    f, _, rounds, _ = jax.lax.while_loop(
-        cond, body, (f1, f0, jnp.int32(1), done_of(f1)))
-    return done_of(f), rounds
+    st0 = (f0, done_of(f0), jnp.bool_(True), jnp.int32(0))
+    f, done, _, rounds = jax.lax.while_loop(cond, body, st0)
+    return done, rounds
 
 
 @functools.partial(jax.jit, static_argnames=("v_n", "n_states", "max_m",
@@ -277,33 +598,23 @@ def _expand_segment(u, v, req_labels, forb_raw_w, full_mask,
                     n_out_u, n_in_v, vtx_packed, elab, edge_src, edge_dst,
                     *, v_n: int, n_states: int, max_m: int, max_rounds: int,
                     chunk_words: int):
-    """Segment-backend executor: frontier [V, Q] packed state bitfields;
-    one round = gather, per-edge transition, packed segment-OR scatter."""
+    """Legacy segment executor: full-graph frontier [V, Q]; one round =
+    gather, per-edge transition, packed segment-OR scatter."""
     q_n = u.shape[0]
     cor_mask = _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed)
-
-    # per-(edge, query) masks from label gathers (exact raw-label forbid)
-    okbit = (forb_raw_w[:, elab >> 5] >>
-             (elab & 31).astype(jnp.uint32)[None, :]) & 1       # [Q, E]
-    allow = jnp.where(okbit == 0, _FULL, jnp.uint32(0)).T       # [E, Q]
-    has_c = _state_has_masks(n_states, max_m)
-    has = jnp.full((elab.shape[0], q_n), _FULL, jnp.uint32)
-    sh = jnp.zeros((elab.shape[0], q_n), jnp.uint32)
-    for i in range(max_m):  # static unroll; require-sets hold distinct labels
-        match = req_labels[:, i][None, :] == elab[:, None]      # [E, Q]
-        has = jnp.where(match, jnp.uint32(has_c[i]), has)
-        sh = jnp.where(match, jnp.uint32(1 << i), sh)
+    allow, has, sh = _edge_state_masks(elab, req_labels, forb_raw_w,
+                                       n_states, max_m)
 
     f0 = jnp.zeros((v_n, q_n), jnp.uint32)
     f0 = f0.at[u, jnp.arange(q_n)].set(jnp.uint32(1))   # state ∅ at source
 
-    def round_(f):
+    def upd_of(f):
         val = _transition(f[edge_src] & allow, has, sh)         # [E, Q]
         upd = bitset.segment_or_words(val, edge_dst, num_segments=v_n,
                                       chunk_words=chunk_words)
-        return f | (upd & cor_mask)
+        return upd & cor_mask
 
-    return _expand_loop(f0, round_, v, full_mask, max_rounds)
+    return _expand_loop(f0, upd_of, v, full_mask, max_rounds)
 
 
 @functools.partial(jax.jit, static_argnames=("n_states", "max_m",
@@ -311,56 +622,65 @@ def _expand_segment(u, v, req_labels, forb_raw_w, full_mask,
 def _expand_matmul(u, v, class_adj, class_label, req_labels, forb_raw_w,
                    full_mask, n_out_u, n_in_v, vtx_packed, *,
                    n_states: int, max_m: int, max_rounds: int, mode: str):
-    """Pallas-backend executor: one ``bitset_matmul`` per label class per
-    round on the packed reverse adjacency (class = one special label that
-    some query requires/forbids, or the merged neutral rest)."""
+    """Legacy pallas executor: one ``bitset_matmul`` per label class per
+    round on the packed full-graph reverse adjacency."""
     q_n = u.shape[0]
     cor_mask = _corridor_mask(u, v, n_out_u, n_in_v, vtx_packed)
-
-    # per-(class, query) masks; the last class is neutral (label -1):
-    # always allowed, identity transition
-    lab = class_label                                           # [C]
-    labx = jnp.maximum(lab, 0)
-    okbit = (forb_raw_w[:, labx >> 5] >>
-             (labx & 31).astype(jnp.uint32)[None, :]) & 1       # [Q, C]
-    neutral = (lab < 0)[None, :]
-    allow = jnp.where(neutral | (okbit == 0), _FULL, jnp.uint32(0)).T
-    has_c = _state_has_masks(n_states, max_m)
-    has = jnp.full((lab.shape[0], q_n), _FULL, jnp.uint32)
-    sh = jnp.zeros((lab.shape[0], q_n), jnp.uint32)
-    for i in range(max_m):
-        match = (req_labels[:, i][None, :] == lab[:, None]) & ~neutral.T
-        has = jnp.where(match, jnp.uint32(has_c[i]), has)
-        sh = jnp.where(match, jnp.uint32(1 << i), sh)
+    neutral = class_label < 0
+    allow, has, sh = _edge_state_masks(class_label, req_labels, forb_raw_w,
+                                       n_states, max_m, neutral=neutral)
 
     v_n = vtx_packed.shape[0]
     f0 = jnp.zeros((v_n, q_n), jnp.uint32)
     f0 = f0.at[u, jnp.arange(q_n)].set(jnp.uint32(1))
 
-    def round_(f):
+    def upd_of(f):
         upd = jnp.zeros_like(f)
         for c in range(class_adj.shape[0]):  # static unroll, C small
             y = engine_mod._matmul_rows(class_adj[c], f, mode)[:v_n]
             upd = upd | _transition(y & allow[c][None, :],
                                     has[c][None, :], sh[c][None, :])
-        return f | (upd & cor_mask)
+        return upd & cor_mask
 
-    return _expand_loop(f0, round_, v, full_mask, max_rounds)
+    return _expand_loop(f0, upd_of, v, full_mask, max_rounds)
 
 
 # ---------------------------------------------------------------- executor
+@dataclasses.dataclass
+class ChunkResult:
+    """Un-synced result of one dispatched chunk (device handles)."""
+    jobs: np.ndarray        # padded job ids [Q]
+    real_n: int
+    reached: Any            # device (or host) bool [Q]
+    rounds: Any             # device int32 scalar (or int)
+    n_active: int = 0       # |V'| this chunk ran on
+    v_total: int = 0        # |V| of the full graph
+
+
 class ExactExecutor:
     """Persistent phase-2 executor bound to one (index, engine) pair.
 
-    Holds the device-resident operands (edge lists, label rows, Blooms) and
-    keeps the jitted expansion entry points warm across ``answer_batch``
-    calls; chunking pads to stable shapes so recompiles only happen when
-    the chunk size or the special-label set changes."""
+    Holds the device-resident operands (edge lists, label rows, Blooms,
+    cached full-graph incidence) plus host mirrors for per-chunk corridor
+    compaction, and keeps the jitted expansion entry points warm across
+    ``answer_batch`` calls.  Chunk shapes (|V'|, |E'|, incidence width)
+    are padded to power-of-two buckets so recompiles stay bounded.
+    ``dispatch_chunk`` never blocks: it returns device handles that the
+    driver collects once all chunks are in flight."""
+
+    # cap on the padded-incidence gather transient (bytes); beyond it the
+    # round falls back to packed segment reductions (extreme hub skew)
+    GATHER_BYTES_CAP = 1 << 28
 
     def __init__(self, index: TDRIndex, eng: "engine_mod.Engine"):
         self.index = index
         self.engine = eng
-        self.elab = jnp.asarray(index.graph.labels)
+        g = index.graph
+        self.elab = jnp.asarray(g.labels)
+        self.src_np = g.src
+        self.dst_np = np.asarray(g.indices)
+        self.lab_np = np.asarray(g.labels)
+        self._full_inc: tuple | None = None   # cached full-graph incidence
 
     def special_labels(self, plan: QueryPlan,
                        jobs: np.ndarray) -> tuple[int, ...]:
@@ -375,9 +695,214 @@ class ExactExecutor:
                     spec.add(w * 32 + b)
         return tuple(sorted(spec))
 
-    def run_chunk(self, plan: QueryPlan, jobs: np.ndarray,
-                  special: tuple[int, ...]) -> tuple[np.ndarray, int]:
-        """Expand one padded chunk of pending jobs -> (reached, rounds)."""
+    def eff_states(self, plan: QueryPlan, jobs: np.ndarray) -> tuple[int,
+                                                                     int]:
+        """(m_eff, n_states) for the pending set: the widest require-set
+        actually present, not the plan-level ``max_m`` cap."""
+        m_eff = int((plan.req_labels[jobs] >= 0).sum(axis=1).max(initial=0))
+        return m_eff, 1 << m_eff
+
+    # ------------------------------------------------------------ planning
+    def _sliced_corridor(self, dev: PlanDevice, jobs: np.ndarray, fn,
+                         out: np.ndarray) -> np.ndarray:
+        """Run a per-job corridor jit over bounded-shape job slices."""
+        idx = self.index
+        p_n = len(jobs)
+        step = 256
+        for c0 in range(0, p_n, step):
+            sl = jobs[c0:c0 + step]
+            jp = graph_mod.pad_pow2(len(sl), lo=16)
+            pj = np.concatenate(
+                [sl, np.full(jp - len(sl), sl[0], sl.dtype)])
+            res = np.asarray(fn(
+                jnp.asarray(pj.astype(np.int32)), dev.u, dev.v,
+                idx.n_out, idx.n_in, idx.vtx_packed))
+            out[c0:c0 + step] = res[:len(sl)]
+        return out
+
+    def chunk_union_counts(self, dev: PlanDevice, jobs: np.ndarray,
+                           chunk: int) -> np.ndarray:
+        """Exact corridor-union size per ``chunk``-sized job group (the
+        cheap compaction probe).  Tail groups are padded with their own
+        first job so the union is not polluted across chunks."""
+        idx = self.index
+        starts = range(0, len(jobs), chunk)
+        out = np.empty(len(starts), dtype=np.int32)
+        step = max(chunk, (256 // chunk) * chunk)
+        padded = []
+        for c0 in starts:
+            grp = jobs[c0:c0 + chunk]
+            if len(grp) < chunk:
+                grp = np.concatenate(
+                    [grp, np.full(chunk - len(grp), grp[0], grp.dtype)])
+            padded.append(grp)
+        pj = np.concatenate(padded)
+        for i0 in range(0, len(pj), step):
+            sl = pj[i0:i0 + step]
+            if len(sl) < step:   # pad with whole dummy chunks of sl[0]
+                sl = np.concatenate(
+                    [sl, np.full(step - len(sl), sl[0], sl.dtype)])
+            res = np.asarray(_corridor_chunk_counts(
+                jnp.asarray(sl.astype(np.int32)), dev.u, dev.v,
+                idx.n_out, idx.n_in, idx.vtx_packed, chunk=chunk))
+            n = min(len(res), len(out) - i0 // chunk)
+            out[i0 // chunk:i0 // chunk + n] = res[:n]
+        return out
+
+    def corridor_members(self, dev: PlanDevice,
+                         jobs: np.ndarray) -> np.ndarray:
+        """Corridor membership bool [P, V] (fetched only for the jobs of
+        chunks that will actually compact)."""
+        return self._sliced_corridor(
+            dev, jobs, _corridor_member,
+            np.empty((len(jobs), self.index.graph.n_vertices), dtype=bool))
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch_chunk(self, plan: QueryPlan, dev: PlanDevice | None,
+                       jobs: np.ndarray,
+                       member: np.ndarray | None, special: tuple[int, ...],
+                       mode: str) -> ChunkResult:
+        """Dispatch one padded chunk of pending jobs -> ``ChunkResult``
+        holding un-synced device handles."""
+        if mode == "legacy":
+            reached, rounds = self._run_legacy(plan, jobs, special)
+            return ChunkResult(jobs, len(jobs), reached, rounds,
+                               self.index.graph.n_vertices,
+                               self.index.graph.n_vertices)
+        return self._run_bidi(plan, dev, jobs, member, special, mode)
+
+    def _run_bidi(self, plan: QueryPlan, dev: PlanDevice,
+                  jobs: np.ndarray,
+                  member: np.ndarray | None, special: tuple[int, ...],
+                  mode: str) -> ChunkResult:
+        """``member is None`` -> full-graph bidi (corridor built on
+        device); else corridor compaction over the member rows."""
+        idx, eng = self.index, self.engine
+        g = idx.graph
+        q_n = len(jobs)
+        v_n = g.n_vertices
+        m_eff, n_states = self.eff_states(plan, jobs)
+        if n_states > 32:
+            raise ValueError(
+                f"max_m={m_eff} needs {n_states} subset states; the packed "
+                "executor holds at most 32 (max_m <= 5)")
+
+        compacted = member is not None
+        if compacted:
+            active = member.any(axis=0)
+            n_sub = int(active.sum())
+            v_p = graph_mod.pad_bucket(n_sub, lo=32)
+            if v_p >= v_n and mode == "auto":
+                compacted = False   # probe over-estimated; run full
+        if compacted:
+            sub_ids, renum, s, d, l = graph_mod.induced_edges(
+                g, active, src=self.src_np)
+            if s.shape[0] == 0:
+                # corridor holds no edges: only the empty path exists, and
+                # phase 1 already answered those — nothing is reachable
+                return ChunkResult(jobs, q_n, np.zeros(q_n, bool), 0,
+                                   n_sub, v_n)
+            cor = np.zeros((v_p, q_n), dtype=bool)
+            cor[:n_sub] = member[:, sub_ids].T
+            su = renum[plan.u[jobs]]
+            sv = renum[plan.v[jobs]]
+        else:
+            # endpoints resolve on device (dev.u[jobs]) in the full path
+            n_sub = v_p = v_n
+            s, d, l = self.src_np, self.dst_np, self.lab_np
+
+        max_rounds = v_p * n_states + 1
+        jobs_j = jnp.asarray(jobs.astype(np.int32))
+
+        use_matmul = eng.backend == "pallas"
+        if use_matmul:
+            kw = bitset.n_words(v_p)
+            n_mats = 2 * (len(special) + 1)
+            if n_mats * v_p * kw * 4 > eng.config.max_dense_bytes:
+                warnings.warn(
+                    f"engine: {n_mats} label-class adjacency matrices "
+                    "exceed max_dense_bytes; expanding this chunk via the "
+                    "segment path", stacklevel=3)
+                use_matmul = False
+
+        if use_matmul:
+            class_label = jnp.asarray(np.asarray(special + (-1,), np.int32))
+            if compacted:
+                adj_rev = jnp.asarray(engine_mod.pack_label_class_edges_np(
+                    s, d, l, v_p, special, reverse=True))
+                adj_fwd = jnp.asarray(engine_mod.pack_label_class_edges_np(
+                    s, d, l, v_p, special, reverse=False))
+                reached, rounds = _expand_bidi_matmul(
+                    jobs_j, dev, jnp.asarray(su), jnp.asarray(sv),
+                    adj_rev, adj_fwd, class_label, jnp.asarray(cor),
+                    n_states=n_states, max_m=m_eff, max_rounds=max_rounds,
+                    mode=eng.matmul_mode)
+            else:
+                adj_rev = eng.label_class_adjacency(special, reverse=True)
+                adj_fwd = eng.label_class_adjacency(special, reverse=False)
+                reached, rounds = _expand_bidi_matmul_full(
+                    jobs_j, dev, adj_rev, adj_fwd, class_label, idx.n_out,
+                    idx.n_in, idx.vtx_packed, n_states=n_states,
+                    max_m=m_eff, max_rounds=max_rounds,
+                    mode=eng.matmul_mode)
+            return ChunkResult(jobs, q_n, reached, rounds, n_sub, v_n)
+
+        if compacted:
+            e_real = s.shape[0]
+            e_p = graph_mod.pad_bucket(e_real, lo=32)
+            if e_p > e_real:   # bucket |E'|; padding rows duplicate edge 0
+                rep = e_p - e_real
+                s = np.concatenate([s, np.repeat(s[:1], rep)])
+                d = np.concatenate([d, np.repeat(d[:1], rep)])
+                l = np.concatenate([l, np.repeat(l[:1], rep)])
+            ids_in = graph_mod.incidence_plan(d[:e_real], v_p, e_p)
+            ids_out = graph_mod.incidence_plan(s[:e_real], v_p, e_p)
+            lab_j, s_j, d_j = jnp.asarray(l), jnp.asarray(s), jnp.asarray(d)
+            # extreme skew beyond what the virtual-row split absorbs:
+            # over the cap, skip the device transfer and fall back to
+            # packed segment reductions on the same edge arrays
+            if (sum(a.size for a in ids_in + ids_out) * q_n * 4
+                    > self.GATHER_BYTES_CAP):
+                in_j = out_j = None
+            else:
+                in_j = tuple(jnp.asarray(a) for a in ids_in)
+                out_j = tuple(jnp.asarray(a) for a in ids_out)
+        else:
+            lab_j, s_j, d_j, in_j, out_j = self._full_incidence()
+            if (sum(a.size for a in in_j + out_j) * q_n * 4
+                    > self.GATHER_BYTES_CAP):
+                in_j = out_j = None
+        kw = dict(n_states=n_states, max_m=m_eff, max_rounds=max_rounds,
+                  chunk_words=eng.config.chunk_words)
+        if compacted:
+            reached, rounds = _expand_bidi(
+                jobs_j, dev, jnp.asarray(su), jnp.asarray(sv),
+                jnp.asarray(cor), lab_j, s_j, d_j, in_j, out_j, **kw)
+        else:
+            reached, rounds = _expand_bidi_full(
+                jobs_j, dev, idx.n_out, idx.n_in, idx.vtx_packed,
+                lab_j, s_j, d_j, in_j, out_j, **kw)
+        return ChunkResult(jobs, q_n, reached, rounds, n_sub, v_n)
+
+    def _full_incidence(self):
+        """Cached full-graph operand tuple for near-total corridors."""
+        if self._full_inc is None:
+            g = self.index.graph
+            e_n = g.n_edges
+            ids_in = graph_mod.incidence_plan(self.dst_np, g.n_vertices,
+                                              e_n)
+            ids_out = graph_mod.incidence_plan(self.src_np, g.n_vertices,
+                                               e_n)
+            self._full_inc = (
+                self.elab, self.engine.edge_src, self.engine.edge_dst,
+                tuple(jnp.asarray(a) for a in ids_in),
+                tuple(jnp.asarray(a) for a in ids_out))
+        return self._full_inc
+
+    def _run_legacy(self, plan: QueryPlan, jobs: np.ndarray,
+                    special: tuple[int, ...]):
+        """PR-1 one-directional full-graph expansion (kept as comparison
+        oracle and ``exact_mode="legacy"``)."""
         idx, eng = self.index, self.engine
         g = idx.graph
         n_states = 1 << plan.max_m
@@ -417,7 +942,7 @@ class ExactExecutor:
                 v_n=g.n_vertices, n_states=n_states, max_m=plan.max_m,
                 max_rounds=max_rounds,
                 chunk_words=eng.config.chunk_words)
-        return np.asarray(reached), int(rounds)
+        return reached, rounds
 
 
 def _executor(index: TDRIndex, eng: "engine_mod.Engine") -> ExactExecutor:
@@ -430,31 +955,43 @@ def _executor(index: TDRIndex, eng: "engine_mod.Engine") -> ExactExecutor:
 
 # ----------------------------------------------------------------- driver
 def _pad_pow2(n: int, lo: int = 16) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
+    return graph_mod.pad_pow2(n, lo)
+
+
+@functools.lru_cache(maxsize=8)
+def _null_words_dev(cfg) -> jax.Array:
+    """Device copy of the packed NULL plane (keyed by the frozen config)."""
+    return jnp.asarray(_null_words(cfg))
 
 
 def answer_batch(index: TDRIndex,
                  queries: Sequence[tuple[int, int, pat.Pattern]],
-                 *, max_m: int = 4, exact_chunk: int = 16,
+                 *, max_m: int = 4, exact_chunk: int = 32,
                  stats: QueryStats | None = None,
                  filters_only: bool = False,
                  backend: str | None = None,
+                 exact_mode: str = "auto",
                  engine_config: "engine_mod.EngineConfig | None" = None
                  ) -> np.ndarray:
     """Answer a batch of PCR queries.  Returns bool [n_queries].
 
     ``backend``/``engine_config`` select the packed-word engine backend for
     phase 2 (and the kernel mode for phase 1); default follows the
-    ``repro.core.engine`` contract.
+    ``repro.core.engine`` contract.  ``exact_mode`` picks the phase-2
+    executor: "auto" (bidirectional, corridor-compacted whenever the
+    padded corridor bucket is smaller than V), "compact" (force
+    compaction), "full" (bidirectional on the full graph), or "legacy"
+    (the retained PR-1 one-directional executor).
     """
     if max_m > 5:
         raise ValueError(
             f"max_m={max_m}: the packed executor holds subset states in one "
             "uint32 bitfield, so at most 5 required labels per term (32 "
             "states); decompose the pattern")
+    if exact_mode not in EXACT_MODES:
+        raise ValueError(f"unknown exact_mode {exact_mode!r}; expected one "
+                         f"of {EXACT_MODES}")
+    t0 = time.perf_counter()
     eng = index.engine(backend, engine_config)
     plan = compile_queries(index, queries, max_m=max_m)
     stats = stats if stats is not None else QueryStats()
@@ -466,10 +1003,11 @@ def answer_batch(index: TDRIndex,
 
     # pad the job axis to a power of two so jit shapes stay stable
     plan_p = plan.pad_to(_pad_pow2(plan.n_jobs))
-    null_w = jnp.asarray(_null_words(index.cfg))
+    pd_u, pd_v = jnp.asarray(plan_p.u), jnp.asarray(plan_p.v)
     verdict = np.asarray(_filter_cascade(
-        jnp.asarray(plan_p.u), jnp.asarray(plan_p.v),
-        jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w), null_w,
+        pd_u, pd_v,
+        jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w),
+        _null_words_dev(index.cfg),
         index.vtx_packed, index.h_vtx, index.h_lab, index.v_vtx,
         index.v_lab, index.n_out, index.n_in, index.push, index.pop,
         k=index.cfg.k, mode=eng.kernel_mode))
@@ -478,6 +1016,7 @@ def answer_batch(index: TDRIndex,
     stats.filter_false += int(((verdict == FALSE) & real).sum())
     stats.filter_true += int(((verdict == TRUE) & real).sum())
     np.logical_or.at(answers, plan_p.qid[(verdict == TRUE) & real], True)
+    stats.phase1_s += time.perf_counter() - t0
 
     pending = np.flatnonzero((verdict == UNKNOWN) & real)
     # jobs whose query is already TRUE need no exact work
@@ -491,18 +1030,67 @@ def answer_batch(index: TDRIndex,
     if len(pending) == 0:
         return answers
 
+    t1 = time.perf_counter()
     ex = _executor(index, eng)
+    v_n = index.graph.n_vertices
     special = ex.special_labels(plan_p, pending)
-    for c0 in range(0, len(pending), exact_chunk):
+    dev = None
+    if exact_mode != "legacy":
+        dev = PlanDevice(pd_u, pd_v, jnp.asarray(plan_p.req_labels),
+                         jnp.asarray(plan_p.forb_raw_w),
+                         jnp.asarray(plan_p.full_mask))
+
+    # chunk layout + compaction probe: per-job corridor sizes cost one tiny
+    # device round-trip; full [P, V] membership is fetched only for the
+    # jobs of chunks that will actually compact
+    starts = list(range(0, len(pending), exact_chunk))
+    if exact_mode == "legacy" or exact_mode == "full":
+        compact_flags = [False] * len(starts)
+    elif exact_mode == "compact":
+        compact_flags = [True] * len(starts)
+    else:
+        unions = ex.chunk_union_counts(dev, pending, exact_chunk)
+        compact_flags = [
+            graph_mod.pad_bucket(int(u), lo=32) < v_n for u in unions]
+    member = None
+    mem_off = {}
+    if any(compact_flags):
+        cjobs = np.concatenate(
+            [pending[c0:c0 + exact_chunk]
+             for c0, flag in zip(starts, compact_flags) if flag])
+        member = ex.corridor_members(dev, cjobs)
+        off = 0
+        for c0, flag in zip(starts, compact_flags):
+            if flag:
+                n = len(pending[c0:c0 + exact_chunk])
+                mem_off[c0] = (off, off + n)
+                off += n
+
+    # dispatch every chunk, then collect once — no per-chunk host sync
+    results = []
+    for c0, flag in zip(starts, compact_flags):
         jobs = pending[c0:c0 + exact_chunk]
         real_n = len(jobs)
+        rows = member[slice(*mem_off[c0])] if flag else None
         if real_n < exact_chunk:   # pad to a stable jit shape
             jobs = np.concatenate(
                 [jobs, np.full(exact_chunk - real_n, jobs[0], np.int64)])
-        reached, rounds = ex.run_chunk(plan_p, jobs, special)
-        stats.exact_rounds += rounds
-        hit = jobs[:real_n][reached[:real_n]]
+            if rows is not None:
+                rows = np.concatenate(
+                    [rows, np.repeat(rows[:1], exact_chunk - real_n,
+                                     axis=0)])
+        res = ex.dispatch_chunk(plan_p, dev, jobs, rows, special,
+                                exact_mode)
+        res.real_n = real_n
+        results.append(res)
+    for res in results:
+        reached = np.asarray(res.reached)[:res.real_n]
+        hit = res.jobs[:res.real_n][reached]
         np.logical_or.at(answers, plan_p.qid[hit], True)
+        stats._round_parts.append(res.rounds)
+        stats.corridor_active += res.n_active
+        stats.corridor_total += res.v_total
+    stats.phase2_s += time.perf_counter() - t1
     return answers
 
 

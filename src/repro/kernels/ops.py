@@ -39,19 +39,25 @@ def _on_tpu() -> bool:
 
 
 def frontier_step(a_packed: jax.Array, x: jax.Array, *,
-                  mode: str = "auto") -> jax.Array:
+                  mode: str = "auto",
+                  tiles: tuple[int, int, int] | None = None) -> jax.Array:
     """One boolean-semiring expansion round: OR_j (A[i,j] & X[j,:]).
 
     mode: "auto" | "pallas" | "interpret" | "ref" | "mxu"
+    tiles: optional (ti, tk, tw) override for the Pallas lowering, for
+      callers and benchmarks that need to pin tile shapes.  The defaults
+      already clamp to the operand (``ti = min(ti, m)`` etc.), so small
+      operands collapse their grid without an override.
     """
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
+    tile_kw = dict(zip(("ti", "tk", "tw"), tiles)) if tiles else {}
     if mode == "pallas":
         KERNEL_INVOCATIONS["bitset_matmul"] += 1
-        return bitset_matmul(a_packed, x)
+        return bitset_matmul(a_packed, x, **tile_kw)
     if mode == "interpret":
         KERNEL_INVOCATIONS["bitset_matmul"] += 1
-        return bitset_matmul(a_packed, x, interpret=True)
+        return bitset_matmul(a_packed, x, interpret=True, **tile_kw)
     if mode == "mxu":
         return frontier_step_mxu(a_packed, x)
     if mode == "ref":

@@ -78,6 +78,8 @@ def _random_queries(rng, g, n):
     for _ in range(n):
         u, v = int(rng.integers(g.n_vertices)), int(rng.integers(
             g.n_vertices))
+        if rng.integers(5) == 0:
+            v = u   # self-queries: only cycles through u can satisfy
         kind = rng.integers(5)
         labs = rng.choice(g.n_labels, size=min(2, g.n_labels),
                           replace=False).tolist()
@@ -106,6 +108,106 @@ def test_answer_batch_matches_oracle_both_backends(seed, kind):
     for backend in BACKENDS:
         got = tdr_query.answer_batch(idx, queries, backend=backend)
         assert got.tolist() == want, backend
+
+
+@hp.given(seed=st.integers(0, 10_000), kind=st.sampled_from(["er", "pa"]))
+@hp.settings(max_examples=6, deadline=None)
+def test_exact_modes_bit_equal(seed, kind):
+    """The corridor-compacted and bidirectional-full executors must be
+    bit-equal to the DFS oracle *and* to the retained PR-1 full-graph
+    executor (exact_mode="legacy"), including forbidden-label patterns
+    and u==v cycle queries."""
+    rng = np.random.default_rng(seed)
+    g = G.random_graph(kind, 45, 2.3, 4, seed=seed)
+    idx = tdr_build.build_index(g, CFG)
+    queries = _random_queries(rng, g, 20)
+    want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in queries]
+    legacy = tdr_query.answer_batch(idx, queries, backend="segment",
+                                    exact_mode="legacy").tolist()
+    assert legacy == want
+    for mode in ("auto", "compact", "full"):
+        got = tdr_query.answer_batch(idx, queries, backend="segment",
+                                     exact_mode=mode).tolist()
+        assert got == want == legacy, mode
+
+
+def test_exact_modes_bit_equal_pallas():
+    """Same bit-equality through the pallas (interpret) matmul executors:
+    compacted per-chunk sub-adjacency and device-built full corridor."""
+    for seed in (2, 9):
+        rng = np.random.default_rng(seed)
+        g = G.random_graph("pa", 40, 2.5, 4, seed=seed)
+        idx = tdr_build.build_index(g, CFG)
+        queries = _random_queries(rng, g, 15)
+        want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in queries]
+        for mode in ("compact", "full", "legacy"):
+            got = tdr_query.answer_batch(idx, queries, backend="pallas",
+                                         exact_mode=mode).tolist()
+            assert got == want, (seed, mode)
+
+
+def test_self_cycle_queries_exact():
+    """u==v with required labels is satisfiable only by a cycle through
+    u collecting them — exact on every executor path."""
+    g = G.Graph.from_edges(
+        5, 2, [(0, 1, 0), (1, 2, 1), (2, 0, 0), (3, 4, 1)])
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig(vtx_bits=32))
+    for mode in ("auto", "compact", "full", "legacy"):
+        assert tdr_query.answer(idx, 0, 0, pat.all_of([0, 1]),
+                                exact_mode=mode) is True
+        assert tdr_query.answer(idx, 3, 3, pat.all_of([1]),
+                                exact_mode=mode) is False
+
+
+def test_corridor_compaction_prunes_and_lazy_stats():
+    """On a sparse graph the corridor must actually shrink the expansion
+    (occupancy < 1), and QueryStats fetches round counters lazily."""
+    g = G.erdos_renyi(120, 1.2, 4, seed=5)
+    idx = tdr_build.build_index(g, CFG)
+    rng = np.random.default_rng(5)
+    queries = _random_queries(rng, g, 40)
+    stats = tdr_query.QueryStats()
+    got = tdr_query.answer_batch(idx, queries, backend="segment",
+                                 stats=stats)
+    want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in queries]
+    assert got.tolist() == want
+    assert stats.exact_jobs > 0
+    assert stats.corridor_total > 0
+    assert stats.corridor_occupancy < 1.0, \
+        "sparse corridors should compact below full V"
+    # lazy round counters: stored as device scalars, summed on access
+    assert isinstance(stats.exact_rounds, int)
+    assert stats.exact_rounds > 0
+    assert stats.phase1_s > 0 and stats.phase2_s > 0
+
+
+def test_incidence_plan_matches_bruteforce():
+    """One- and two-level padded incidence reduce to the same segment OR
+    (two-level triggers on the pa graph's hub tail)."""
+    rng = np.random.default_rng(0)
+    levels_seen = set()
+    for kind in ("er", "pa"):
+        g = G.random_graph(kind, 400, 4.0, 4, seed=0)
+        keys = np.asarray(g.indices)
+        plan = G.incidence_plan(keys, g.n_vertices, g.n_edges)
+        levels_seen.add(len(plan))
+        val = rng.integers(0, 2 ** 32, (g.n_edges + 1, 2),
+                           dtype=np.uint32)
+        val[-1] = 0
+        cur = val
+        for level in plan:
+            nxt = np.zeros((level.shape[0], 2), np.uint32)
+            for i in range(level.shape[0]):
+                for j in level[i]:
+                    if j < cur.shape[0]:
+                        nxt[i] |= cur[j]
+            cur = np.concatenate([nxt, np.zeros((1, 2), np.uint32)])
+        want = np.zeros((g.n_vertices, 2), np.uint32)
+        for e in range(g.n_edges):
+            want[keys[e]] |= val[e]
+        np.testing.assert_array_equal(cur[:g.n_vertices], want, err_msg=kind)
+    assert levels_seen == {1, 2}, \
+        "expected er to stay one-level and pa's hubs to trigger two-level"
 
 
 def test_query_plan_is_packed_and_padded():

@@ -13,6 +13,9 @@ RNG = np.random.default_rng(0)
 @pytest.mark.parametrize("m,k,w", [
     (8, 32, 1), (16, 64, 2), (50, 96, 3), (130, 256, 5), (1, 32, 1),
     (257, 160, 7), (64, 1024, 4),
+    # the fully-occupied default tile + non-tile-multiple wide shapes
+    # (the vectorized column-broadcast inner loop's padding paths)
+    (128, 128, 128), (100, 224, 40), (70, 64, 33),
 ])
 @pytest.mark.parametrize("density", [0.02, 0.3])
 def test_bitset_matmul_sweep(m, k, w, density):
@@ -23,6 +26,20 @@ def test_bitset_matmul_sweep(m, k, w, density):
     want = np.asarray(ref.bitset_matmul_ref(a_packed, xj))
     got = np.asarray(ops.frontier_step(a_packed, xj, mode="interpret"))
     np.testing.assert_array_equal(got, want)
+
+
+def test_frontier_step_tiles_passthrough():
+    """Explicit (ti, tk, tw) overrides reach the kernel and stay exact at
+    shapes that are not multiples of the requested tiles."""
+    a_bool = RNG.random((90, 160)) < 0.1
+    x = RNG.integers(0, 2 ** 32, size=(160, 5), dtype=np.uint32)
+    a_packed = jnp.asarray(bitset.pack_bits_np(a_bool))
+    xj = jnp.asarray(x)
+    want = np.asarray(ref.bitset_matmul_ref(a_packed, xj))
+    for tiles in [(32, 64, 2), (64, 160, 5), (128, 32, 8)]:
+        got = np.asarray(ops.frontier_step(a_packed, xj, mode="interpret",
+                                           tiles=tiles))
+        np.testing.assert_array_equal(got, want, err_msg=str(tiles))
 
 
 def test_bitset_matmul_mxu_path():

@@ -1,4 +1,11 @@
-"""Paper Fig 6 / Appendix C: scalability — vary |V| at fixed D, |ζ|."""
+"""Paper Fig 6 / Appendix C: scalability — vary |V| at fixed D, |ζ|.
+
+Also times the vertex-sharded distributed build/query against the
+single-device path on a mesh of every local device (1 on a laptop CPU;
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a
+real multi-device row) and records whether the planes stayed
+bit-identical.
+"""
 from __future__ import annotations
 
 import time
@@ -28,4 +35,38 @@ def run(scale: str = "smoke", seed: int = 0) -> list:
                 qt = qt / len(qq) * 1e6
             rows.append((f"fig6/{kind}/V{v}", round(bt * 1e6, 1),
                          f"index_bytes={idx.size_bytes()};query_us={qt:.1f}"))
+    rows += _distributed_rows(scale, seed)
     return rows
+
+
+def _distributed_rows(scale: str, seed: int) -> list:
+    """Sharded-vs-single build on a mesh of all local devices."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import distributed
+
+    sc = common.SCALES[scale]
+    v = sc["scal_v"][0]
+    g = G.random_graph("er", v, 4.0, 8, seed=seed)
+    cfg = tdr_build.TDRConfig()
+    t0 = time.perf_counter()
+    idx1 = tdr_build.build_index(g, cfg)
+    t_single = time.perf_counter() - t0
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs.reshape(-1), ("data",))
+    t0 = time.perf_counter()
+    idxd = distributed.build_index(g, cfg, mesh=mesh)
+    t_mesh = time.perf_counter() - t0
+    identical = all(
+        np.array_equal(np.asarray(getattr(idxd, f)),
+                       np.asarray(getattr(idx1, f)))
+        for f in ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in"))
+    qs = common.make_query_sets(g, max(10, sc["queries"] // 10), 2,
+                                seed=seed)["AND-true"]
+    t0 = time.perf_counter()
+    got = distributed.answer_batch(idxd, qs.queries, mesh=mesh)
+    qt = ((time.perf_counter() - t0) / max(len(qs.queries), 1)) * 1e6
+    correct = got.tolist() == qs.truth
+    return [(f"fig6/dist/V{v}/d{devs.size}", round(t_mesh * 1e6, 1),
+             f"single_us={t_single * 1e6:.1f};bit_identical={identical};"
+             f"query_us={qt:.1f};query_correct={correct}")]

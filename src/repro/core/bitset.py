@@ -6,8 +6,9 @@ and *query* math also runs end-to-end on packed words via
 ``segment_or_words`` (word-chunked unpack transients only — no full-width
 boolean plane is ever materialized at rest).  On TPU the packed layout feeds
 ``repro.kernels.bitset_matmul`` directly (32 graph columns per lane
-element).  ``segment_or`` (boolean-plane input) remains for the distributed
-exchange path in ``repro.core.distributed``.
+element).  The distributed exchange (``repro.core.distributed``) also ships
+packed words only; ``segment_or`` (boolean-plane input) survives solely as
+the reference oracle in ``tests/test_engine.py``.
 """
 from __future__ import annotations
 
@@ -65,8 +66,10 @@ def segment_or(values: jax.Array, segment_ids: jax.Array, *, num_segments: int,
                chunk: int = 64) -> jax.Array:
     """OR-reduce boolean planes ``[E, nbits]`` by segment.
 
-    Implemented as chunked ``segment_max`` over uint8 planes so the transient
-    gather stays ``E x chunk`` instead of ``E x nbits``.
+    Reference oracle for ``segment_or_words`` in tests — no runtime path
+    ships bool planes anymore.  Implemented as chunked ``segment_max`` over
+    uint8 planes so the transient gather stays ``E x chunk`` instead of
+    ``E x nbits``.
     """
     e, nbits = values.shape
     nchunks = -(-nbits // chunk)

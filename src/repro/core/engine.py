@@ -185,6 +185,69 @@ def _closure_matmul(base: jax.Array, adj: jax.Array, *, max_iters: int,
     return r, rounds
 
 
+# ------------------------------------------------- mesh-aware entry points
+# These run *inside* ``shard_map`` blocks (repro.core.distributed): the
+# vertex dimension is 1-D partitioned over the flattened mesh axes, each
+# device owns a contiguous block of rows, and the only cross-device traffic
+# is the all_gather of the packed uint32 closure words — no ``[V, nbits]``
+# boolean plane ever crosses devices.
+
+
+def all_gather_words(x_local: jax.Array, axis_names) -> jax.Array:
+    """Gather shard-local packed rows into the full table ``[V, W]``.
+
+    Gathers the innermost mesh axis first so the flattened ordering matches
+    the axis-major shard numbering of a ``P(axis_names)`` leading-dim spec.
+    The payload stays packed uint32 end-to-end.
+    """
+    full = x_local
+    for ax in reversed(tuple(axis_names)):
+        full = jax.lax.all_gather(full, axis_name=ax, tiled=True)
+    return full
+
+
+def propagate_sharded(x_local: jax.Array, gather_idx: jax.Array,
+                      scatter_idx: jax.Array, valid_words: jax.Array,
+                      axis_names, *, num_segments: int,
+                      chunk_words: int) -> jax.Array:
+    """One sharded semiring round ``out[a] = OR_{(a,b)} x[b]`` (packed).
+
+    ``gather_idx`` holds the *global* remote endpoint of each shard-owned
+    edge (indexing the all_gathered table), ``scatter_idx`` the shard-local
+    owned endpoint, and ``valid_words`` an all-ones/all-zeros uint32 mask
+    zeroing the padding slots of the static edge layout.
+    """
+    full = all_gather_words(x_local, axis_names)
+    vals = full[gather_idx] & valid_words
+    return bitset.segment_or_words(vals, scatter_idx,
+                                   num_segments=num_segments,
+                                   chunk_words=chunk_words)
+
+
+def closure_sharded(base: jax.Array, step, axis_names, *, max_iters: int):
+    """lfp(R = base ∨ step(R)) over shard-local rows; returns (R, rounds).
+
+    Same ``upd & ~r`` changed-flag idiom as ``_closure_segment``, but the
+    flag is all-reduced over the mesh every round so every device stops at
+    the same globally-converged round — callers never guess a round count.
+    """
+
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, _, it = state
+        new = step(r) & ~r
+        changed = jax.lax.psum(jnp.any(new != 0).astype(jnp.int32),
+                               tuple(axis_names)) > 0
+        return r | new, changed, it + 1
+
+    r, _, rounds = jax.lax.while_loop(cond, body,
+                                      (base, jnp.bool_(True), jnp.int32(0)))
+    return r, rounds
+
+
 # ------------------------------------------------------------------ engine
 class Engine:
     """OR-semiring propagation over one graph, packed words in/out.

@@ -86,6 +86,9 @@ class TDRIndex:
     fixpoint_rounds: int = 0
     _vtx_packed: Any = dataclasses.field(default=None, repr=False)
     _engines: dict = dataclasses.field(default_factory=dict, repr=False)
+    # per-mesh replicated copies of the query-side planes (the distributed
+    # cascade broadcasts them once per mesh, not once per batch)
+    _replicated: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def vtx_packed(self) -> jax.Array:
@@ -170,6 +173,26 @@ def dfs_intervals(graph: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     return push.astype(np.int32), pop.astype(np.int32), disc.astype(np.int32)
 
 
+def _hash_keys(n: int) -> list:
+    """``n`` distinct odd 64-bit multipliers for the Bloom hash schedule.
+
+    The first three are the historical golden-ratio constants (so indexes
+    built with ``n_hashes <= 4`` are unchanged); beyond that, keys are
+    derived per-index with splitmix64.  The pre-fix schedule wrapped
+    (``ks[(i - 1) % 3]``), so hash 4 duplicated hash 1 bit-for-bit —
+    silently adding zero Bloom selectivity.
+    """
+    ks = [0x9E3779B97F4A7C15, 0xC2B2AE3D27D4EB4F, 0x165667B19E3779F9]
+    mask = (1 << 64) - 1
+    x = ks[-1]
+    while len(ks) < n:
+        x = (x + 0x9E3779B97F4A7C15) & mask
+        z = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & mask
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+        ks.append((z ^ (z >> 31)) | 1)
+    return [np.uint64(k) for k in ks[:n]]
+
+
 def _vertex_hash_positions(cfg: TDRConfig, disc: np.ndarray) -> list:
     """Bloom bit positions per vertex: one int64 [V] array per hash."""
     v_n = disc.shape[0]
@@ -181,10 +204,9 @@ def _vertex_hash_positions(cfg: TDRConfig, disc: np.ndarray) -> list:
     else:
         h0 = ((ids + 1) * np.uint64(2654435761)) % np.uint64(cfg.vtx_bits)
     positions = [h0.astype(np.int64) % cfg.vtx_bits]
-    ks = [np.uint64(0x9E3779B97F4A7C15), np.uint64(0xC2B2AE3D27D4EB4F),
-          np.uint64(0x165667B19E3779F9)]
+    ks = _hash_keys(max(cfg.n_hashes - 1, 0))
     for i in range(1, cfg.n_hashes):
-        h = (((ids + 1) * ks[(i - 1) % len(ks)]) >> np.uint64(17)) % np.uint64(
+        h = (((ids + 1) * ks[i - 1]) >> np.uint64(17)) % np.uint64(
             cfg.vtx_bits)
         positions.append(h.astype(np.int64))
     return positions
@@ -200,8 +222,9 @@ def _vertex_bit_words(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
 
 
 def _vertex_bit_rows(cfg: TDRConfig, disc: np.ndarray) -> np.ndarray:
-    """Bloom bit pattern per vertex (bool [V, vtx_bits]) — the unpacked
-    view used by the distributed bool-plane exchange and tests."""
+    """Bloom bit pattern per vertex (bool [V, vtx_bits]) — unpacked view
+    for tests/debug only; every runtime path (including the distributed
+    exchange) works on the packed words of ``_vertex_bit_words``."""
     v_n = disc.shape[0]
     rows = np.zeros((v_n, cfg.vtx_bits), dtype=bool)
     for pos in _vertex_hash_positions(cfg, disc):
@@ -254,14 +277,20 @@ def way_assignment(cfg: TDRConfig, graph: Graph,
 # ----------------------------------------------------------- device build
 def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
                 backend: str | None = None,
-                engine_config: "engine_mod.EngineConfig | None" = None
-                ) -> TDRIndex:
+                engine_config: "engine_mod.EngineConfig | None" = None,
+                mesh=None) -> TDRIndex:
     """Construct the full TDR index for every vertex of ``graph``.
 
     All semiring math runs through the packed-word engine; ``backend``
     (or ``engine_config`` / ``REPRO_ENGINE_BACKEND``) selects segment vs
-    pallas per the contract in ``repro.core.engine``.
+    pallas per the contract in ``repro.core.engine``.  ``mesh`` (a
+    ``jax.sharding.Mesh``) routes to the vertex-sharded distributed build
+    (``repro.core.distributed.build_index``) — bit-identical planes, with
+    the per-round exchange packed uint32 words.
     """
+    if mesh is not None:
+        from . import distributed  # deferred: distributed imports us back
+        return distributed.build_index(graph, cfg, mesh=mesh)
     v_n, e_n = graph.n_vertices, graph.n_edges
     push, pop, disc = dfs_intervals(graph)
     vtx_words_np = _vertex_bit_words(cfg, disc)

@@ -689,10 +689,9 @@ class ExactExecutor:
         req = plan.req_labels[jobs]
         spec = set(int(l) for l in req[req >= 0])
         forb = np.bitwise_or.reduce(plan.forb_raw_w[jobs], axis=0)
-        for w, word in enumerate(forb):
-            for b in range(32):
-                if (int(word) >> b) & 1:
-                    spec.add(w * 32 + b)
+        bits = np.unpackbits(forb.astype("<u4").view(np.uint8),
+                             bitorder="little")
+        spec.update(np.flatnonzero(bits).tolist())
         return tuple(sorted(spec))
 
     def eff_states(self, plan: QueryPlan, jobs: np.ndarray) -> tuple[int,
@@ -971,8 +970,8 @@ def answer_batch(index: TDRIndex,
                  filters_only: bool = False,
                  backend: str | None = None,
                  exact_mode: str = "auto",
-                 engine_config: "engine_mod.EngineConfig | None" = None
-                 ) -> np.ndarray:
+                 engine_config: "engine_mod.EngineConfig | None" = None,
+                 mesh=None) -> np.ndarray:
     """Answer a batch of PCR queries.  Returns bool [n_queries].
 
     ``backend``/``engine_config`` select the packed-word engine backend for
@@ -982,6 +981,16 @@ def answer_batch(index: TDRIndex,
     padded corridor bucket is smaller than V), "compact" (force
     compaction), "full" (bidirectional on the full graph), or "legacy"
     (the retained PR-1 one-directional executor).
+
+    ``mesh`` (a ``jax.sharding.Mesh``) distributes the batch: the phase-1
+    cascade runs with the job axis sharded over every device
+    (``repro.core.distributed.filter_cascade_sharded``; the index planes
+    are broadcast, the plan rows are the only sharded traffic) and
+    compacted phase-2 expansion chunks are round-robined across the
+    mesh's devices — chunk dispatch never blocks, so devices expand
+    concurrently, while full-graph chunks stay with the shared V-sized
+    operands on the lead device.  Answers are bit-identical to the
+    single-device path.
     """
     if max_m > 5:
         raise ValueError(
@@ -1001,16 +1010,25 @@ def answer_batch(index: TDRIndex,
     if plan.n_jobs == 0:
         return answers
 
-    # pad the job axis to a power of two so jit shapes stay stable
+    # pad the job axis to a power of two so jit shapes stay stable (and,
+    # under a mesh, further to a multiple of the device count)
     plan_p = plan.pad_to(_pad_pow2(plan.n_jobs))
+    if mesh is not None:
+        n_dev = mesh.devices.size
+        plan_p = plan_p.pad_to(-(-plan_p.n_jobs // n_dev) * n_dev)
     pd_u, pd_v = jnp.asarray(plan_p.u), jnp.asarray(plan_p.v)
-    verdict = np.asarray(_filter_cascade(
-        pd_u, pd_v,
-        jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w),
-        _null_words_dev(index.cfg),
-        index.vtx_packed, index.h_vtx, index.h_lab, index.v_vtx,
-        index.v_lab, index.n_out, index.n_in, index.push, index.pop,
-        k=index.cfg.k, mode=eng.kernel_mode))
+    if mesh is not None:
+        from . import distributed as dist_mod  # deferred: imports us back
+        verdict = dist_mod.filter_cascade_sharded(index, plan_p, mesh,
+                                                  eng.kernel_mode)
+    else:
+        verdict = np.asarray(_filter_cascade(
+            pd_u, pd_v,
+            jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w),
+            _null_words_dev(index.cfg),
+            index.vtx_packed, index.h_vtx, index.h_lab, index.v_vtx,
+            index.v_lab, index.n_out, index.n_in, index.push, index.pop,
+            k=index.cfg.k, mode=eng.kernel_mode))
 
     real = plan_p.qid >= 0
     stats.filter_false += int(((verdict == FALSE) & real).sum())
@@ -1066,8 +1084,17 @@ def answer_batch(index: TDRIndex,
                 mem_off[c0] = (off, off + n)
                 off += n
 
-    # dispatch every chunk, then collect once — no per-chunk host sync
+    # dispatch every chunk, then collect once — no per-chunk host sync.
+    # Under a mesh, *compacted* chunks round-robin over its devices:
+    # their operands (induced subgraph, membership rows) are per-chunk
+    # host data that must transfer anyway, so spreading them is pure
+    # concurrency (dispatch is async).  Full-graph chunks stay on the
+    # lead device, where the V-sized shared operands (index planes,
+    # cached incidence / class adjacency) already live — round-robining
+    # those would re-ship the whole index every chunk.
+    devices = list(mesh.devices.flat) if mesh is not None else [None]
     results = []
+    rr = 0
     for c0, flag in zip(starts, compact_flags):
         jobs = pending[c0:c0 + exact_chunk]
         real_n = len(jobs)
@@ -1079,8 +1106,16 @@ def answer_batch(index: TDRIndex,
                 rows = np.concatenate(
                     [rows, np.repeat(rows[:1], exact_chunk - real_n,
                                      axis=0)])
-        res = ex.dispatch_chunk(plan_p, dev, jobs, rows, special,
-                                exact_mode)
+        dev_i = devices[0] if mesh is None or not flag \
+            else devices[rr % len(devices)]
+        rr += flag
+        if dev_i is None:
+            res = ex.dispatch_chunk(plan_p, dev, jobs, rows, special,
+                                    exact_mode)
+        else:
+            with jax.default_device(dev_i):
+                res = ex.dispatch_chunk(plan_p, dev, jobs, rows, special,
+                                        exact_mode)
         res.real_n = real_n
         results.append(res)
     for res in results:

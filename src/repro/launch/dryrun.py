@@ -17,7 +17,11 @@ Per cell this driver:
   5. dumps everything to JSON for ARCHITECTURE.md.
 
 Also lowers the paper's own engine (``--arch tdr-graph``): the distributed
-TDR closure fixpoint on the full mesh.
+TDR closure fixpoint on the full mesh — vertex-sharded with the per-round
+exchange as packed uint32 closure words (the runtime build/query paths in
+``repro.core.distributed`` converge via an all-reduced changed flag; the
+lowering here keeps a static round count so the HLO cost accounting sees
+a fixed trip count).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
@@ -243,7 +247,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
 
 def run_tdr_cell(mesh_kind: str) -> dict:
-    """Dry-run the paper's engine: distributed closure on the full mesh."""
+    """Dry-run the paper's engine: distributed closure on the full mesh.
+
+    The lowered fixpoint exchanges packed uint32 words (V × W × 4 bytes
+    per round over the gather axis); ``rounds`` is static here purely for
+    cost accounting — see ``distributed.lower_distributed_closure``.
+    """
     from repro.core import distributed
     t0 = time.time()
     the_mesh = mesh_lib.make_production_mesh(

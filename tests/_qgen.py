@@ -1,0 +1,23 @@
+"""Shared mixed-PCR query generator for the distributed test legs.
+
+Side-effect-free on purpose: ``tests/multidevice_check.py`` mutates
+``XLA_FLAGS`` before importing jax, so it cannot import the pytest
+modules — both it and ``tests/test_distributed.py`` import this instead,
+keeping the in-process and subprocess legs on the same query
+distribution.
+"""
+from repro.core import pattern as pat
+
+
+def mixed_queries(rng, g, n):
+    """n random (u, v, pattern) triples: AND / OR / NOT / mixed terms,
+    with ~1 in 5 self-queries (only cycles through u can satisfy)."""
+    qs = []
+    for _ in range(n):
+        u = int(rng.integers(g.n_vertices))
+        v = u if rng.integers(5) == 0 else int(rng.integers(g.n_vertices))
+        labs = rng.choice(g.n_labels, size=2, replace=False).tolist()
+        p = [pat.all_of(labs), pat.any_of(labs), pat.none_of(labs),
+             pat.parse(f"l{labs[0]} & !l{labs[1]}")][int(rng.integers(4))]
+        qs.append((u, v, p))
+    return qs

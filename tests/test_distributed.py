@@ -1,0 +1,121 @@
+"""Distributed TDR: sharded build/query equivalence.
+
+Fast legs run on a 1-device mesh in-process; the real multi-device leg
+spawns ``tests/multidevice_check.py`` in a subprocess with 8 fake
+host-platform devices (jax locks the device count at first init, so it
+cannot run in this process).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from _qgen import mixed_queries as _mixed_queries
+from repro.core import (dfs_baseline, distributed, graph as G,
+                        tdr_build, tdr_query)
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+
+
+def test_sharded_build_bit_identical():
+    """distributed.build_index == tdr_build.build_index on every plane
+    (1-device mesh; the >=4-device leg is the subprocess check)."""
+    g = G.random_graph("pa", 57, 2.3, 4, seed=3)
+    ref = tdr_build.build_index(g, CFG, backend="segment")
+    got = tdr_build.build_index(g, CFG, mesh=_mesh1())
+    for f in ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f)
+    assert got.fixpoint_rounds == ref.fixpoint_rounds
+    np.testing.assert_array_equal(np.asarray(got.push),
+                                  np.asarray(ref.push))
+    np.testing.assert_array_equal(got.vtx_words, ref.vtx_words)
+
+
+def test_sharded_answer_batch_matches_oracle():
+    g = G.random_graph("er", 48, 2.2, 4, seed=7)
+    mesh = _mesh1()
+    idx = tdr_build.build_index(g, CFG, mesh=mesh)
+    rng = np.random.default_rng(7)
+    queries = _mixed_queries(rng, g, 24)
+    want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in queries]
+    got = distributed.answer_batch(idx, queries, mesh=mesh,
+                                   backend="segment")
+    assert got.tolist() == want
+    # and bit-identical to the meshless driver on the same index
+    local = tdr_query.answer_batch(idx, queries, backend="segment")
+    assert got.tolist() == local.tolist()
+
+
+def test_filter_cascade_sharded_matches_local():
+    g = G.random_graph("er", 40, 2.0, 4, seed=5)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    rng = np.random.default_rng(5)
+    plan = tdr_query.compile_queries(idx, _mixed_queries(rng, g, 20))
+    mesh = _mesh1()
+    jp = -(-plan.n_jobs // mesh.devices.size) * mesh.devices.size
+    plan_p = plan.pad_to(max(jp, 16))
+    import jax.numpy as jnp
+    want = np.asarray(tdr_query._filter_cascade(
+        jnp.asarray(plan_p.u), jnp.asarray(plan_p.v),
+        jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w),
+        tdr_query._null_words_dev(idx.cfg),
+        idx.vtx_packed, idx.h_vtx, idx.h_lab, idx.v_vtx, idx.v_lab,
+        idx.n_out, idx.n_in, idx.push, idx.pop, k=idx.cfg.k, mode="ref"))
+    got = distributed.filter_cascade_sharded(idx, plan_p, mesh, "ref")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sharded_build_edgeless_graph():
+    """An edgeless graph must build (every shard slot is padding), and
+    still match the single-device planes bit-for-bit."""
+    g = G.Graph.from_edges(6, 2, [])
+    ref = tdr_build.build_index(g, CFG, backend="segment")
+    got = tdr_build.build_index(g, CFG, mesh=_mesh1())
+    for f in ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f)
+
+
+def test_partition_graph_covers_every_edge():
+    g = G.random_graph("pa", 33, 2.5, 3, seed=1)
+    for by in ("src", "dst"):
+        v_pad, ed = distributed.partition_graph(g, 4, by=by)
+        per = v_pad // 4
+        own = g.src if by == "src" else np.asarray(g.indices)
+        other = np.asarray(g.indices) if by == "src" else g.src
+        seen = set()
+        for s in range(4):
+            for k in np.flatnonzero(ed.valid[s]):
+                e = int(ed.eidx[s, k])
+                assert e not in seen
+                seen.add(e)
+                assert own[e] == ed.local[s, k] + s * per
+                assert other[e] == ed.remote[s, k]
+        assert len(seen) == g.n_edges
+
+
+@pytest.mark.slow
+def test_multidevice_subprocess():
+    """The >=4-device acceptance leg: 8 fake host-platform devices in a
+    fresh process (device count locks at jax init)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # the script pins its own device count
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "multidevice_check.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "multidevice check OK" in r.stdout

@@ -210,6 +210,21 @@ def test_incidence_plan_matches_bruteforce():
         "expected er to stay one-level and pa's hubs to trigger two-level"
 
 
+def test_special_labels_multiword():
+    """The vectorized forbidden-label extraction must read every word of
+    the packed raw plane (labels >= 32 live past the first uint32)."""
+    g = G.erdos_renyi(30, 2.0, 70, seed=0)
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig(vtx_bits=64))
+    qs = [(0, 5, pat.none_of([0, 33, 69])), (1, 7, pat.all_of([2, 40])),
+          (2, 9, pat.parse("l5 & !l64"))]
+    plan = tdr_query.compile_queries(idx, qs)
+    ex = tdr_query.ExactExecutor(idx, idx.engine("segment"))
+    jobs = np.arange(plan.n_jobs)
+    assert ex.special_labels(plan, jobs) == (0, 2, 5, 33, 40, 64, 69)
+    # single-job slices see only their own labels
+    assert ex.special_labels(plan, np.array([0])) == (0, 33, 69)
+
+
 def test_query_plan_is_packed_and_padded():
     g = G.fig2_example()
     idx = tdr_build.build_index(g, tdr_build.TDRConfig(vtx_bits=32))

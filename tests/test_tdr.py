@@ -138,21 +138,57 @@ def test_index_size_accounting():
 
 
 def test_distributed_closure_matches_oracle():
+    """Converged packed-word closure == the tdr_build fixpoint semantics:
+    R[u] = OR over v with u →+ v of bits(v) — the vertex's own seed bits
+    are NOT included unless u lies on a cycle (no rounds= guess, no
+    rows[u] OR papering over the old self-seed mismatch)."""
     import jax
     from jax.sharding import Mesh
-    from repro.core import distributed, bitset
+    from repro.core import distributed
     g = G.erdos_renyi(50, 2.0, 4, seed=1)
     cfg = tdr_build.TDRConfig(vtx_bits=64)
     _, _, disc = tdr_build.dfs_intervals(g)
+    words = tdr_build._vertex_bit_words(cfg, disc)
     rows = tdr_build._vertex_bit_rows(cfg, disc)
     mesh = Mesh(np.array(jax.devices()).reshape(1,), ("data",))
-    rvec = np.asarray(distributed.distributed_closure(g, rows, mesh,
-                                                      rounds=50))
+    rvec = np.asarray(distributed.distributed_closure(g, words, mesh))
     for u in range(0, 50, 7):
         reach = dfs_baseline.reachable_set(g, u)
-        want = rows[u].copy()
+        want = np.zeros(cfg.vtx_bits, dtype=bool)
         for v in np.flatnonzero(reach):
             want |= rows[v]
         got = np.unpackbits(rvec[u].view(np.uint8),
                             bitorder="little")[:64].astype(bool)
         assert (want == got).all()
+
+
+def test_distributed_closure_rejects_bool_planes():
+    """The bool-plane exchange is retired: packed uint32 words only."""
+    import jax
+    import pytest as pt
+    from jax.sharding import Mesh
+    from repro.core import distributed
+    g = G.erdos_renyi(10, 1.5, 2, seed=0)
+    mesh = Mesh(np.array(jax.devices()).reshape(1,), ("data",))
+    with pt.raises(TypeError, match="packed uint32"):
+        distributed.distributed_closure(
+            g, np.zeros((10, 32), dtype=bool), mesh)
+
+
+def test_hash_schedule_never_wraps():
+    """All n_hashes Bloom position arrays must be pairwise distinct — the
+    pre-fix key schedule wrapped at 4 hashes (ks[(i-1) % 3]), making hash
+    4 duplicate hash 1 bit-for-bit with zero added selectivity."""
+    disc = np.arange(200, dtype=np.int64)
+    for scheme in ("dfs-block", "mult"):
+        cfg = tdr_build.TDRConfig(vtx_bits=256, n_hashes=8,
+                                  hash_scheme=scheme)
+        pos = tdr_build._vertex_hash_positions(cfg, disc)
+        assert len(pos) == 8
+        for i in range(len(pos)):
+            for j in range(i + 1, len(pos)):
+                assert not np.array_equal(pos[i], pos[j]), (scheme, i, j)
+    # the first four hashes (the pre-fix reach) are frozen: same keys
+    ks = tdr_build._hash_keys(3)
+    assert [int(k) for k in ks] == [0x9E3779B97F4A7C15, 0xC2B2AE3D27D4EB4F,
+                                    0x165667B19E3779F9]

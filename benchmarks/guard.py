@@ -1,13 +1,23 @@
-"""tableIII regression guard for CI.
+"""tableIII + serving regression guard for CI.
 
-Re-runs the tableIII smoke benchmark and compares each reachable-query
-(``*-true``) row's ``us_per_call`` against the committed rows in
-``BENCH_queries.json`` (the newest ``pr`` generation per (name, backend)).
-A row fails the build if it regresses more than ``--factor`` (default
-1.5×) after machine-drift normalization, or if any row reports
-``correct=False``.  The benchmark is measured twice and each row keeps
-its best pass — shared CI hosts spike individual runs 2-3× on scheduler
-noise, which the gate must not fire on.
+Re-runs the tableIII and serving smoke benchmarks and compares each gated
+row's ``us_per_call`` against the committed rows in ``BENCH_queries.json``
+(the newest ``pr`` generation per (name, backend)).  Gated rows are the
+reachable-query (``*-true``) tableIII rows and the serving closed-loop
+p95-latency row (``serving/er/closed-p95``) — both DFS-normalized with
+the same drift factor (the serving row gets ``SERVING_SLACK`` on top:
+concurrent-client queueing latency is far noisier than single-thread
+us/call, and its tight contract lives in the serving module's own
+asserts); ``--backends segment,pallas`` (the ci.yml setting) gates both
+engine backends.  A row fails the build if it regresses more
+than ``--factor`` (default 1.5×) after machine-drift normalization, or if
+any row reports ``correct=False``, or if a benchmark module crashes (the
+serving module deliberately raises when its contract breaks: answers must
+match the DFS oracle, steady-state traffic must trigger zero jit
+recompiles, and closed-loop throughput must clear its serial-1 floor).
+The benchmark is measured twice and each row keeps its best pass —
+shared CI hosts spike individual runs 2-3× on scheduler noise, which the
+gate must not fire on.
 
 Machine-drift normalization: absolute microseconds are not comparable
 across hosts (CI runners vs the machine that produced the committed
@@ -34,6 +44,27 @@ def _derived_field(derived: str, key: str) -> float | None:
     return float(m.group(1)) if m else None
 
 
+# extra allowance for the serving latency row: p95 under CLIENTS
+# concurrent threads varies with host core count and scheduler load in a
+# way the single-thread DFS drift anchor cannot track (a 2-core CI
+# runner queues 32 clients far deeper than the committing machine while
+# DFS barely moves), so the gate only fires on order-of-magnitude
+# regressions there — the serving module's own in-process asserts
+# (speedup floor, zero recompiles, oracle equality) carry the tight
+# contract
+SERVING_SLACK = 3.0
+
+
+def _gated(name: str) -> bool:
+    """Rows whose us_per_call regressions fail the build: reachable
+    tableIII rows and the serving closed-loop p95 latency row."""
+    return name.endswith("-true") or name.endswith("/closed-p95")
+
+
+def _slack(name: str) -> float:
+    return SERVING_SLACK if name.endswith("/closed-p95") else 1.0
+
+
 def latest_rows(records: list) -> dict:
     """Newest-generation committed row per (name, backend): highest
     ``pr`` tag wins, later file position breaks ties."""
@@ -56,7 +87,7 @@ def check(baseline_path: str, backends: list, factor: float,
     best: dict = {}
     order = []
     for _ in range(max(passes, 1)):
-        for rec in run_mod.collect(scale, only="tableIII",
+        for rec in run_mod.collect(scale, only="tableIII,serving",
                                    backends=backends):
             key = (rec["name"], rec["backend"])
             if key not in best:
@@ -94,9 +125,9 @@ def check(baseline_path: str, backends: list, factor: float,
             failures.append(f"{key}: correct=False")
             verdict = "WRONG"
             allowed = committed = float("nan")
-        elif key in base and rec["name"].endswith("-true"):
+        elif key in base and _gated(rec["name"]):
             committed = base[key]["us_per_call"]
-            allowed = committed * drift * factor
+            allowed = committed * drift * factor * _slack(rec["name"])
             ok = rec["us_per_call"] <= allowed
             verdict = "ok" if ok else "REGRESSED"
             compared += 1
@@ -116,8 +147,9 @@ def check(baseline_path: str, backends: list, factor: float,
     if not compared:
         # e.g. a row rename detached every fresh row from the baseline —
         # zero comparisons is a silently toothless gate, so fail loudly
-        failures.append("no fresh *-true row matched a committed baseline "
-                        "row; regenerate BENCH_queries.json")
+        failures.append("no fresh gated (*-true / closed-p95) row matched "
+                        "a committed baseline row; regenerate "
+                        "BENCH_queries.json")
     if failures:
         print("\nREGRESSION GUARD FAILED:", file=sys.stderr)
         for f_ in failures:

@@ -1,4 +1,5 @@
-"""Benchmark harness entry point — one module per paper table/figure.
+"""Benchmark harness entry point — one module per paper table/figure,
+plus the ``serving`` load-generator suite over ``repro.launch.serve``.
 
 ``PYTHONPATH=src python -m benchmarks.run [--scale smoke|small|full]``
 prints ``name,us_per_call,derived`` CSV rows (paper-table mapping and the
@@ -24,7 +25,7 @@ import json
 from repro.core import engine as engine_mod
 
 from . import (common, index_cost, kernels_bench, lcr_bench, queries,
-               scalability, synthetic_sweeps)
+               scalability, serving, synthetic_sweeps)
 
 MODULES = [
     ("tableIII", queries),
@@ -33,6 +34,7 @@ MODULES = [
     ("fig4-5", synthetic_sweeps),
     ("fig6", scalability),
     ("kernels", kernels_bench),
+    ("serving", serving),
 ]
 
 

@@ -1,0 +1,237 @@
+"""Query-serving benchmark: load generators over ``repro.launch.serve``.
+
+Measures the micro-batching scheduler the way a serving system is graded
+(FERRARI-style sustained workloads, not offline batches):
+
+* **serial-1 baseline** — the same requests issued as size-1
+  ``answer_batch`` calls (steady state: plan cache warm, jit warm).  This
+  is what a naive per-request front-end would get.
+* **closed loop** — N concurrent clients, each submitting its next query
+  when the previous answer lands; reports sustained q/s and per-request
+  p50/p95/p99 latency.
+* **open loop** — Poisson arrivals at a fixed offered rate through the
+  non-blocking (admission-controlled) submit path; reports completed q/s,
+  latency percentiles, and the shed-request count.
+
+The module *asserts* the serving contract (raising turns the row into an
+``ERROR`` row, which ``benchmarks.guard`` fails):
+
+* closed-loop throughput >= 5x the serial-1 baseline (real-kernel paths;
+  the interpret-mode pallas leg reports but does not hard-gate the
+  ratio — see the MIN_SPEEDUP note below),
+* zero jit recompiles across the measurement window
+  (``engine.jit_cache_entries`` delta after ``QueryServer.warmup``),
+* answers bit-equal to the DFS oracle.
+
+Rows carry ``dfs_us`` so the guard's machine-drift normalization works on
+the serving rows exactly as on tableIII rows.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import dfs_baseline, engine as engine_mod, graph as G
+from repro.core import tdr_build, tdr_query
+from repro.launch import serve
+
+from . import common
+
+CLIENTS = 32            # closed-loop concurrency
+REQUESTS_PER_CLIENT = 20
+OPEN_LOAD = 0.7         # open-loop offered rate as a fraction of closed q/s
+OPEN_WINDOW_S = 2.0
+MIN_SPEEDUP = 5.0       # acceptance floor vs the serial-1 baseline
+# pallas-on-CPU runs the kernels in interpret mode, where per-round
+# *compute* (C+1 emulated matmuls per direction, C fixed by the pinned
+# label-class set) dwarfs the per-call dispatch that batching amortizes —
+# a serial-1 call only scans its own query's 2-3 classes — and wall-clock
+# is noise-dominated on shared hosts.  The 5x floor is the contract for
+# the real-kernel paths (segment everywhere, pallas on TPU); the
+# interpret leg reports its ratio but is perf-gated only through the
+# guard's drift-normalized p95 comparison (correctness and the
+# zero-recompile assert still apply unconditionally).
+
+
+def _percentiles(lat_s: list) -> dict:
+    arr = np.asarray(lat_s, dtype=np.float64) * 1e6
+    if arr.size == 0:
+        return {"p50_us": float("nan"), "p95_us": float("nan"),
+                "p99_us": float("nan")}
+    return {"p50_us": round(float(np.percentile(arr, 50)), 1),
+            "p95_us": round(float(np.percentile(arr, 95)), 1),
+            "p99_us": round(float(np.percentile(arr, 99)), 1)}
+
+
+def _pool(g, n_per_set: int, seed: int):
+    """Mixed AND/OR/NOT/LCR pool with DFS-oracle truth, interleaved so
+    any contiguous batch window mixes families."""
+    sets = common.make_query_sets(g, n_per_set, 2, seed=seed)
+    pool, truth = [], []
+    by_set = [list(zip(s.queries, s.truth)) for s in sets.values()]
+    for i in range(max(len(b) for b in by_set)):
+        for b in by_set:
+            if i < len(b):
+                q, t = b[i]
+                pool.append(q)
+                truth.append(t)
+    return pool, truth
+
+
+def _closed_loop(server, pool, truth, rng):
+    """N clients, each replaying a shard of the shuffled pool."""
+    order = rng.permutation(
+        np.tile(np.arange(len(pool)), REQUESTS_PER_CLIENT * CLIENTS
+                // len(pool) + 1))[:REQUESTS_PER_CLIENT * CLIENTS]
+    shards = np.array_split(order, CLIENTS)
+    lat, wrong = [], []
+    lock = threading.Lock()
+
+    def client(ids):
+        for i in ids:
+            u, v, p = pool[int(i)]
+            t0 = time.perf_counter()
+            got = server.submit(u, v, p).result()
+            dt = time.perf_counter() - t0
+            with lock:
+                lat.append(dt)
+                if got != truth[int(i)]:
+                    wrong.append(int(i))
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in shards]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return len(order) / wall, lat, wrong
+
+
+def _open_loop(server, pool, truth, rate_qps: float, rng):
+    """Poisson arrivals at ``rate_qps`` through non-blocking submits."""
+    n = max(1, int(rate_qps * OPEN_WINDOW_S))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+    ids = rng.integers(0, len(pool), size=n)
+    done: list = []
+    wrong: list = []
+    rejected = 0
+    lock = threading.Lock()
+    t_start = time.perf_counter()
+    pending = []
+    for t_arr, i in zip(arrivals, ids):
+        now = time.perf_counter() - t_start
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        t0 = time.perf_counter()
+        try:
+            fut = server.submit(*pool[int(i)], block=False)
+        except serve.QueueFull:
+            rejected += 1
+            continue
+
+        def record(f, t0=t0, i=int(i)):
+            dt = time.perf_counter() - t0
+            with lock:
+                done.append(dt)
+                if f.result() != truth[i]:
+                    wrong.append(i)
+
+        fut.add_done_callback(record)
+        pending.append(fut)
+    for f in pending:
+        f.result(timeout=120)
+    wall = time.perf_counter() - t_start
+    return len(done) / wall, done, wrong, rejected, n
+
+
+def run(scale: str = "smoke", seed: int = 0,
+        backend: str | None = None) -> list:
+    sc = common.SCALES[scale]
+    g = G.random_graph("er", sc["v"], 4.0, 8, seed=seed)
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig(), backend=backend)
+    pool, truth = _pool(g, max(8, sc["queries"] // 3), seed)
+    rng = np.random.default_rng(seed + 1)
+
+    # DFS baseline (drift anchor, shared pure-python code on every host)
+    t0 = time.perf_counter()
+    for (u, v, p) in pool:
+        dfs_baseline.answer_pcr(g, u, v, p)
+    dfs_us = (time.perf_counter() - t0) / len(pool) * 1e6
+
+    # serial-1 baseline: steady state (second pass), caches warm
+    for q in pool:
+        tdr_query.answer_batch(idx, [q], backend=backend)
+    t0 = time.perf_counter()
+    serial_ans = [bool(tdr_query.answer_batch(idx, [q], backend=backend)[0])
+                  for q in pool]
+    serial_qps = len(pool) / (time.perf_counter() - t0)
+    ok_serial = serial_ans == truth
+
+    rows = []
+    with serve.QueryServer(idx, backend=backend, result_cache=0) as server:
+        server.warmup(pool)
+        n0 = engine_mod.jit_cache_entries()
+        if n0 == 0:
+            # the hot path definitely compiled by now: a zero here means
+            # the counter itself broke (e.g. a jax upgrade renamed the
+            # private _cache_size hook) and the zero-recompile assert
+            # below would pass vacuously — fail loudly instead
+            raise RuntimeError(
+                "engine.jit_cache_entries() == 0 after warmup; the "
+                "compilation counter is broken on this jax version")
+
+        closed_qps, closed_lat, closed_wrong = _closed_loop(
+            server, pool, truth, rng)
+        open_rate = max(1.0, OPEN_LOAD * closed_qps)
+        open_qps, open_lat, open_wrong, rejected, offered = _open_loop(
+            server, pool, truth, open_rate, rng)
+
+        recompiles = engine_mod.jit_cache_entries() - n0
+        ok = ok_serial and not closed_wrong and not open_wrong
+        speedup = closed_qps / serial_qps
+
+        cp = _percentiles(closed_lat)
+        op = _percentiles(open_lat)
+        st = server.stats
+        rows.append((
+            "serving/er/closed-p95", cp["p95_us"],
+            f"dfs_us={dfs_us:.1f};qps={closed_qps:.0f};"
+            f"serial1_qps={serial_qps:.0f};speedup_vs_serial1="
+            f"{speedup:.1f}x;recompiles={recompiles};correct={ok}",
+            {**cp, "mean_batch": round(st.mean_batch, 1),
+             "plan_hit_rate": round(
+                 1 - st.query_stats.plan_misses
+                 / max(st.query_stats.plan_lookups, 1), 3)}))
+        rows.append((
+            "serving/er/open-p95", op["p95_us"],
+            f"dfs_us={dfs_us:.1f};qps={open_qps:.0f};"
+            f"offered_qps={open_rate:.0f};rejected={rejected}/{offered};"
+            f"correct={not open_wrong}",
+            op))
+        rows.append((
+            "serving/er/serial1", round(1e6 / serial_qps, 1),
+            f"dfs_us={dfs_us:.1f};qps={serial_qps:.0f};"
+            f"correct={ok_serial}"))
+
+        # the serving contract is load-bearing for CI: fail loudly, not
+        # with a quietly degraded row
+        if recompiles:
+            raise RuntimeError(
+                f"serving: {recompiles} jit recompiles after warmup")
+        if not ok:
+            raise RuntimeError(
+                f"serving: answers diverged from the DFS oracle "
+                f"(serial={ok_serial}, closed={len(closed_wrong)}, "
+                f"open={len(open_wrong)} wrong)")
+        import jax
+        interpret = (engine_mod.resolve_backend(backend or "auto")
+                     == "pallas" and jax.default_backend() != "tpu")
+        if not interpret and speedup < MIN_SPEEDUP:
+            raise RuntimeError(
+                f"serving: closed-loop {closed_qps:.0f} q/s is only "
+                f"{speedup:.1f}x the serial-1 baseline "
+                f"({serial_qps:.0f} q/s); need >= {MIN_SPEEDUP}x")
+    return rows

@@ -358,6 +358,30 @@ class Engine:
                                 max_iters=max_iters)
 
 
+def jit_cache_entries() -> int:
+    """Total compiled-variant count across the packed-word hot path.
+
+    Sums the jit caches of every jitted entry point in the engine, the
+    query planner/executor, the bitset primitives, and the kernel surface.
+    The serving benchmark snapshots this after warmup and asserts a zero
+    delta over the measurement window — steady-state traffic on the
+    bucket grid must never recompile.
+    """
+    import sys
+
+    from repro.core import bitset as bitset_mod, tdr_query
+    from repro.kernels import (bitset_matmul, ops, pattern_filter,
+                               popcount)
+    total = 0
+    for mod in (sys.modules[__name__], bitset_mod, tdr_query, ops,
+                bitset_matmul, pattern_filter, popcount):
+        for obj in vars(mod).values():
+            size = getattr(obj, "_cache_size", None)
+            if callable(size):
+                total += int(size())
+    return total
+
+
 def make_engine(graph: Graph, backend: str | None = None,
                 config: EngineConfig | None = None) -> Engine:
     """Engine factory: ``backend`` shorthand overrides ``config.backend``."""

@@ -16,6 +16,15 @@ The DNF compiler normalises any pattern into ``⋁ terms``, each term a pair
 * NOT-query  ``NOT{l_i}``  -> one term, require=∅, forbid={l_i}
   (the paper reads ``NOT`` as "all listed labels absent")
 * LCR(allowed A)           -> one term, require=∅, forbid=ζ∖A
+
+Canonicalization / hash-consing: ``canonicalize`` rewrites any pattern
+into a structurally canonical form (children flattened, deduped, sorted;
+double negation removed; single-child And/Or unwrapped) and interns the
+result, so two syntactically different spellings of the same composite
+pattern share one AST object and one ``canonical_key`` string.  The
+serving layer keys its plan and result caches on that string, and
+``to_dnf`` memoizes per canonical form — repeated query shapes skip DNF
+expansion (and, one layer up, planning) entirely.
 """
 from __future__ import annotations
 
@@ -105,6 +114,66 @@ def labels_of(p: Pattern) -> FrozenSet[int]:
         return labels_of(p.child)
     return frozenset(itertools.chain.from_iterable(
         labels_of(c) for c in p.children))
+
+
+# ------------------------------------------------- canonical form / intern
+# key -> interned canonical AST.  Bounded: past the cap new forms are
+# still canonicalized but returned un-interned (correctness is structural
+# equality, interning only makes repeats cheap), so adversarial traffic
+# cannot grow the table without bound.
+_INTERN_CAP = 1 << 16
+_intern: dict = {}
+
+
+def _canon(p: Pattern) -> tuple[Pattern, str]:
+    """(canonical node, canonical key).  Keys are unambiguous serialized
+    forms — ``l3``, ``!(k)``, ``&(k1,k2)``, ``|(k1,k2)`` — usable both as
+    cache keys and as the total order for sorting And/Or children."""
+    if isinstance(p, Label):
+        return p, f"l{p.index}"
+    if isinstance(p, Not):
+        child, ck = _canon(p.child)
+        if isinstance(child, Not):          # ¬¬x = x
+            return _canon(child.child)
+        return Not(child), f"!({ck})"
+    if isinstance(p, (And, Or)):
+        op, mark = (And, "&") if isinstance(p, And) else (Or, "|")
+        kids: dict[str, Pattern] = {}
+        for c in p.children:
+            cc, ck = _canon(c)
+            if isinstance(cc, op):          # flatten nested same-op
+                for gc in cc.children:
+                    gcc, gck = _canon(gc)
+                    kids.setdefault(gck, gcc)
+            else:
+                kids.setdefault(ck, cc)     # dedup by key
+        if len(kids) == 1:
+            (ck, cc), = kids.items()        # single child unwraps
+            return cc, ck
+        keys = sorted(kids)
+        node = op(tuple(kids[k] for k in keys))
+        return node, f"{mark}({','.join(keys)})"
+    raise TypeError(p)
+
+
+def canonicalize(p: Pattern) -> Pattern:
+    """Canonical, hash-consed form of ``p`` (semantically equal to ``p``).
+
+    Repeated calls with structurally equal inputs return the *same*
+    object, so identity comparison and dict hashing over canonical
+    patterns are cheap."""
+    node, key = _canon(p)
+    hit = _intern.get(key)
+    if hit is not None:
+        return hit
+    if len(_intern) < _INTERN_CAP:
+        _intern[key] = node
+    return node
+
+
+def canonical_key(p: Pattern) -> str:
+    """Stable string key of the canonical form (plan/result cache key)."""
+    return _canon(p)[1]
 
 
 # ---------------------------------------------------------------- parser
@@ -198,12 +267,29 @@ class DnfTerm:
         return self.require <= present and not (self.forbid & present)
 
 
+_DNF_CACHE_CAP = 4096
+_dnf_cache: dict = {}
+
+
 def to_dnf(p: Pattern, max_terms: int = 256) -> list[DnfTerm]:
     """Disjunctive normal form as (require, forbid) terms.
 
     Contradictory terms are dropped; terms subsumed by a weaker term are
-    pruned.  ``max_terms`` bounds the classical DNF blow-up.
+    pruned.  ``max_terms`` bounds the classical DNF blow-up.  Results are
+    memoized per canonical form, so repeated query shapes expand once.
     """
+    key = (canonical_key(p), max_terms)
+    hit = _dnf_cache.get(key)
+    if hit is not None:
+        return list(hit)
+    out = _to_dnf_uncached(canonicalize(p), max_terms)
+    if len(_dnf_cache) >= _DNF_CACHE_CAP:
+        _dnf_cache.clear()
+    _dnf_cache[key] = tuple(out)
+    return out
+
+
+def _to_dnf_uncached(p: Pattern, max_terms: int) -> list[DnfTerm]:
     terms = _dnf(p)
     # drop contradictions
     terms = [t for t in terms if not (t.require & t.forbid)]

@@ -9,7 +9,11 @@ Planner — ``compile_queries`` flattens DNF terms into a fully vectorized
 forbidden-label rows, and padded required-label ids.  No per-edge or
 per-vertex host arrays — everything edge-indexed is derived on device by
 the executor via label gathers (no ``elab == l`` Python scans, no
-``[Q, E]`` host-side dense masks).
+``[Q, E]`` host-side dense masks).  Per-pattern rows are cached on the
+index keyed by the hash-consed canonical pattern (``pattern_rows``), so
+repeated query shapes skip DNF expansion and plane scatters; callers that
+manage their own plans and job-axis padding (``repro.launch.serve``) use
+``answer_plan`` directly.
 
 Phase 1 — *filter cascade* (pure index math, no traversal):
   * ``u == v``            -> TRUE iff the term requires no labels
@@ -61,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 import warnings
 from typing import Any, NamedTuple, Sequence
@@ -137,6 +142,11 @@ class QueryStats:
     filter_false: int = 0
     filter_true: int = 0
     exact_jobs: int = 0
+    plan_lookups: int = 0      # pattern-plan cache probes (compile_queries)
+    plan_misses: int = 0       # ... that had to run DNF + plane scatters
+    # query ids that reached phase 2 in the last answer_plan call (the
+    # serving warmup uses these as expansion-compiling probe queries)
+    exact_qids: list = dataclasses.field(default_factory=list, repr=False)
     corridor_active: int = 0   # Σ |V'| over dispatched phase-2 chunks
     corridor_total: int = 0    # Σ |V|  over dispatched phase-2 chunks
     phase1_s: float = 0.0      # planner + filter cascade wall time
@@ -158,43 +168,53 @@ class QueryStats:
         return self.corridor_active / self.corridor_total
 
 
-def compile_queries(index: TDRIndex,
-                    queries: Sequence[tuple[int, int, pat.Pattern]],
-                    max_m: int = 4) -> QueryPlan:
-    """Compile (u, v, pattern) triples into a vectorized ``QueryPlan``.
+class PatternRows(NamedTuple):
+    """Per-pattern compiled plan rows (one row per DNF term) — everything
+    in a ``QueryPlan`` that does not depend on the endpoints, so one cache
+    entry serves every (u, v) pair asking the same composite pattern."""
+    req_w: np.ndarray       # uint32 [T, Wl]
+    forb_w: np.ndarray      # uint32 [T, Wl]
+    forb_raw_w: np.ndarray  # uint32 [T, WL]
+    req_labels: np.ndarray  # int32 [T, max_m]
+    full_mask: np.ndarray   # int32 [T]
 
-    DNF expansion walks the pattern ASTs (inherently per-term Python); all
-    plane construction from the flattened term lists is vectorized numpy
-    scatters into packed words.
-    """
+    @property
+    def n_terms(self) -> int:
+        return int(self.full_mask.shape[0])
+
+
+PLAN_CACHE_CAP = 4096   # canonical patterns retained per index
+
+# guards the per-index plan-cache dicts: the serving layer resolves
+# patterns from many client threads concurrently with the scheduler
+# thread, and the LRU pop/reinsert refresh is not atomic under the GIL
+_plan_cache_lock = threading.Lock()
+
+
+def _compile_pattern_rows(index: TDRIndex, p: pat.Pattern,
+                          max_m: int) -> PatternRows:
+    """Compile one pattern's DNF terms into packed plan rows."""
     cfg = index.cfg
-    n_lab = index.graph.n_labels
     wl = bitset.n_words(cfg.lab_bits)
-    wraw = bitset.n_words(max(n_lab, 1))
-
-    qid, us, vs = [], [], []
-    req_j, req_l = [], []      # flattened (job, label) pairs
-    forb_j, forb_l = [], []
-    req_rows = []              # per-job sorted required ids
-    for qi, (u, v, p) in enumerate(queries):
-        for term in pat.to_dnf(p):
-            if len(term.require) > max_m:
-                raise ValueError(
-                    f"term with {len(term.require)} required labels exceeds "
-                    f"max_m={max_m}; decompose the pattern")
-            j = len(qid)
-            qid.append(qi); us.append(u); vs.append(v)
-            rl = sorted(term.require)
-            req_rows.append(rl)
-            req_j += [j] * len(rl); req_l += rl
-            forb_j += [j] * len(term.forbid); forb_l += sorted(term.forbid)
-
-    j_n = len(qid)
-    req_w = np.zeros((j_n, wl), dtype=np.uint32)
-    forb_w = np.zeros((j_n, wl), dtype=np.uint32)
-    forb_raw_w = np.zeros((j_n, wraw), dtype=np.uint32)
-    req_labels = np.full((j_n, max_m), -1, dtype=np.int32)
-    full_mask = np.zeros(j_n, dtype=np.int32)
+    wraw = bitset.n_words(max(index.graph.n_labels, 1))
+    terms = pat.to_dnf(p)
+    t_n = len(terms)
+    req_w = np.zeros((t_n, wl), dtype=np.uint32)
+    forb_w = np.zeros((t_n, wl), dtype=np.uint32)
+    forb_raw_w = np.zeros((t_n, wraw), dtype=np.uint32)
+    req_labels = np.full((t_n, max_m), -1, dtype=np.int32)
+    full_mask = np.zeros(t_n, dtype=np.int32)
+    req_j, req_l, forb_j, forb_l = [], [], [], []
+    for j, term in enumerate(terms):
+        if len(term.require) > max_m:
+            raise ValueError(
+                f"term with {len(term.require)} required labels exceeds "
+                f"max_m={max_m}; decompose the pattern")
+        rl = sorted(term.require)
+        req_j += [j] * len(rl); req_l += rl
+        forb_j += [j] * len(term.forbid); forb_l += sorted(term.forbid)
+        req_labels[j, :len(rl)] = rl
+        full_mask[j] = (1 << len(rl)) - 1
     if req_j:
         rj = np.asarray(req_j); rl = np.asarray(req_l, np.int64)
         bitset.set_bits_np(req_w, (rj,), index.lab_slot[rl])
@@ -202,16 +222,79 @@ def compile_queries(index: TDRIndex,
         fj = np.asarray(forb_j); fl = np.asarray(forb_l, np.int64)
         bitset.set_bits_np(forb_w, (fj,), index.lab_slot[fl])
         bitset.set_bits_np(forb_raw_w, (fj,), fl)
-    for j, rl in enumerate(req_rows):
-        req_labels[j, :len(rl)] = rl
-        full_mask[j] = (1 << len(rl)) - 1
+    return PatternRows(req_w, forb_w, forb_raw_w, req_labels, full_mask)
 
+
+def pattern_rows(index: TDRIndex, p: pat.Pattern, max_m: int = 4,
+                 stats: "QueryStats | None" = None) -> PatternRows:
+    """Cached plan rows for one pattern (hash-consed canonical key).
+
+    The cache lives on the index (rows bake in ``lab_slot`` and the label
+    word widths) and is a bounded LRU, so steady query traffic with
+    repeated composite patterns skips DNF expansion and plane construction
+    entirely — the serving layer leans on this for its plan cache.
+    ``stats`` counts the lookup (and the miss, if any) exactly."""
+    key = (pat.canonical_key(p), max_m)
+    if stats is not None:
+        stats.plan_lookups += 1
+    with _plan_cache_lock:
+        cache = getattr(index, "_plan_cache", None)
+        if cache is None:
+            cache = {}
+            index._plan_cache = cache
+        rows = cache.get(key)
+        if rows is not None:
+            cache[key] = cache.pop(key)     # refresh LRU position
+            return rows
+    if stats is not None:
+        stats.plan_misses += 1
+    # DNF expansion + plane scatters run outside the lock (a slow first
+    # compile of one pattern must not stall every other submitter)
+    rows = _compile_pattern_rows(index, pat.canonicalize(p), max_m)
+    with _plan_cache_lock:
+        while len(cache) >= PLAN_CACHE_CAP:
+            cache.pop(next(iter(cache)))
+        cache[key] = rows
+    return rows
+
+
+def compile_queries(index: TDRIndex,
+                    queries: Sequence[tuple[int, int, pat.Pattern]],
+                    max_m: int = 4,
+                    stats: "QueryStats | None" = None) -> QueryPlan:
+    """Compile (u, v, pattern) triples into a vectorized ``QueryPlan``.
+
+    Per-pattern rows come from the hash-consed plan cache
+    (``pattern_rows``); only the endpoint columns and query-id row map are
+    assembled fresh, so batches dominated by repeated patterns plan in
+    O(n_queries) numpy concatenation."""
+    cfg = index.cfg
+    wl = bitset.n_words(cfg.lab_bits)
+    wraw = bitset.n_words(max(index.graph.n_labels, 1))
+    rows_per_q = [pattern_rows(index, p, max_m, stats=stats)
+                  for (_, _, p) in queries]
+    counts = np.asarray([r.n_terms for r in rows_per_q], dtype=np.int64)
+
+    def cat(name, empty_cols):
+        parts = [getattr(r, name) for r in rows_per_q if r.n_terms]
+        if not parts:
+            dt = np.int32 if name in ("req_labels", "full_mask") else \
+                np.uint32
+            shape = (0,) if name == "full_mask" else (0, empty_cols)
+            return np.zeros(shape, dtype=dt)
+        return np.concatenate(parts)
+
+    uv = np.asarray([(u, v) for (u, v, _) in queries],
+                    dtype=np.int32).reshape(len(queries), 2)
+    qid = np.repeat(np.arange(len(queries), dtype=np.int32), counts)
     return QueryPlan(
-        qid=np.asarray(qid, np.int32).reshape(j_n),
-        u=np.asarray(us, np.int32).reshape(j_n),
-        v=np.asarray(vs, np.int32).reshape(j_n),
-        req_w=req_w, forb_w=forb_w, forb_raw_w=forb_raw_w,
-        req_labels=req_labels, full_mask=full_mask,
+        qid=qid,
+        u=np.repeat(uv[:, 0], counts),
+        v=np.repeat(uv[:, 1], counts),
+        req_w=cat("req_w", wl), forb_w=cat("forb_w", wl),
+        forb_raw_w=cat("forb_raw_w", wraw),
+        req_labels=cat("req_labels", max_m),
+        full_mask=cat("full_mask", 0),
         n_queries=len(queries), max_m=max_m)
 
 
@@ -694,11 +777,16 @@ class ExactExecutor:
         spec.update(np.flatnonzero(bits).tolist())
         return tuple(sorted(spec))
 
-    def eff_states(self, plan: QueryPlan, jobs: np.ndarray) -> tuple[int,
-                                                                     int]:
+    def eff_states(self, plan: QueryPlan, jobs: np.ndarray,
+                   pin_m: int | None = None) -> tuple[int, int]:
         """(m_eff, n_states) for the pending set: the widest require-set
-        actually present, not the plan-level ``max_m`` cap."""
+        actually present, not the plan-level ``max_m`` cap.  ``pin_m``
+        (serving) raises it to a fixed floor so steady traffic keeps one
+        static state width per chunk shape instead of recompiling per
+        batch composition."""
         m_eff = int((plan.req_labels[jobs] >= 0).sum(axis=1).max(initial=0))
+        if pin_m is not None:
+            m_eff = min(max(m_eff, pin_m), plan.max_m)
         return m_eff, 1 << m_eff
 
     # ------------------------------------------------------------ planning
@@ -760,7 +848,7 @@ class ExactExecutor:
     def dispatch_chunk(self, plan: QueryPlan, dev: PlanDevice | None,
                        jobs: np.ndarray,
                        member: np.ndarray | None, special: tuple[int, ...],
-                       mode: str) -> ChunkResult:
+                       mode: str, pin_m: int | None = None) -> ChunkResult:
         """Dispatch one padded chunk of pending jobs -> ``ChunkResult``
         holding un-synced device handles."""
         if mode == "legacy":
@@ -768,19 +856,19 @@ class ExactExecutor:
             return ChunkResult(jobs, len(jobs), reached, rounds,
                                self.index.graph.n_vertices,
                                self.index.graph.n_vertices)
-        return self._run_bidi(plan, dev, jobs, member, special, mode)
+        return self._run_bidi(plan, dev, jobs, member, special, mode, pin_m)
 
     def _run_bidi(self, plan: QueryPlan, dev: PlanDevice,
                   jobs: np.ndarray,
                   member: np.ndarray | None, special: tuple[int, ...],
-                  mode: str) -> ChunkResult:
+                  mode: str, pin_m: int | None = None) -> ChunkResult:
         """``member is None`` -> full-graph bidi (corridor built on
         device); else corridor compaction over the member rows."""
         idx, eng = self.index, self.engine
         g = idx.graph
         q_n = len(jobs)
         v_n = g.n_vertices
-        m_eff, n_states = self.eff_states(plan, jobs)
+        m_eff, n_states = self.eff_states(plan, jobs, pin_m)
         if n_states > 32:
             raise ValueError(
                 f"max_m={m_eff} needs {n_states} subset states; the packed "
@@ -953,10 +1041,6 @@ def _executor(index: TDRIndex, eng: "engine_mod.Engine") -> ExactExecutor:
 
 
 # ----------------------------------------------------------------- driver
-def _pad_pow2(n: int, lo: int = 16) -> int:
-    return graph_mod.pad_pow2(n, lo)
-
-
 @functools.lru_cache(maxsize=8)
 def _null_words_dev(cfg) -> jax.Array:
     """Device copy of the packed NULL plane (keyed by the frozen config)."""
@@ -974,6 +1058,33 @@ def answer_batch(index: TDRIndex,
                  mesh=None) -> np.ndarray:
     """Answer a batch of PCR queries.  Returns bool [n_queries].
 
+    Compilation goes through the hash-consed pattern-plan cache
+    (``pattern_rows``); answering is ``answer_plan`` — callers that manage
+    their own plans and padding (the serving scheduler) use that entry
+    point directly.
+    """
+    t0 = time.perf_counter()
+    plan = compile_queries(index, queries, max_m=max_m, stats=stats)
+    return answer_plan(index, plan, exact_chunk=exact_chunk, stats=stats,
+                       filters_only=filters_only, backend=backend,
+                       exact_mode=exact_mode, engine_config=engine_config,
+                       mesh=mesh, _t0=t0)
+
+
+def answer_plan(index: TDRIndex, plan: QueryPlan,
+                *, exact_chunk: int = 32,
+                stats: QueryStats | None = None,
+                filters_only: bool = False,
+                backend: str | None = None,
+                exact_mode: str = "auto",
+                engine_config: "engine_mod.EngineConfig | None" = None,
+                mesh=None,
+                special_labels: Sequence[int] | None = None,
+                pin_m: int | None = None,
+                pad_lo: int = 16,
+                _t0: float | None = None) -> np.ndarray:
+    """Answer a compiled ``QueryPlan``.  Returns bool [plan.n_queries].
+
     ``backend``/``engine_config`` select the packed-word engine backend for
     phase 2 (and the kernel mode for phase 1); default follows the
     ``repro.core.engine`` contract.  ``exact_mode`` picks the phase-2
@@ -981,6 +1092,17 @@ def answer_batch(index: TDRIndex,
     padded corridor bucket is smaller than V), "compact" (force
     compaction), "full" (bidirectional on the full graph), or "legacy"
     (the retained PR-1 one-directional executor).
+
+    The job axis is padded onto the ``{2^k, 3·2^(k-1)}`` bucket grid
+    (``graph.pad_bucket``, via ``QueryPlan.pad_to``; ``pad_lo`` is the
+    grid floor — the serving scheduler passes its own so its warmed grid
+    and live batches agree), so jit shapes under varying batch sizes stay
+    on a logarithmic grid of variants.  The
+    serving scheduler pre-compiles that grid and pins the two
+    content-dependent statics — ``pin_m`` fixes the subset-state width,
+    ``special_labels`` fixes the label-class set (it is unioned with the
+    labels the batch actually needs, so a pin can widen but never break
+    correctness) — which makes steady-state traffic recompile-free.
 
     ``mesh`` (a ``jax.sharding.Mesh``) distributes the batch: the phase-1
     cascade runs with the job axis sharded over every device
@@ -992,17 +1114,16 @@ def answer_batch(index: TDRIndex,
     operands on the lead device.  Answers are bit-identical to the
     single-device path.
     """
-    if max_m > 5:
+    if plan.max_m > 5:
         raise ValueError(
-            f"max_m={max_m}: the packed executor holds subset states in one "
-            "uint32 bitfield, so at most 5 required labels per term (32 "
-            "states); decompose the pattern")
+            f"max_m={plan.max_m}: the packed executor holds subset states "
+            "in one uint32 bitfield, so at most 5 required labels per term "
+            "(32 states); decompose the pattern")
     if exact_mode not in EXACT_MODES:
         raise ValueError(f"unknown exact_mode {exact_mode!r}; expected one "
                          f"of {EXACT_MODES}")
-    t0 = time.perf_counter()
+    t0 = _t0 if _t0 is not None else time.perf_counter()
     eng = index.engine(backend, engine_config)
-    plan = compile_queries(index, queries, max_m=max_m)
     stats = stats if stats is not None else QueryStats()
     stats.n_queries += plan.n_queries
     stats.n_jobs += plan.n_jobs
@@ -1010,9 +1131,9 @@ def answer_batch(index: TDRIndex,
     if plan.n_jobs == 0:
         return answers
 
-    # pad the job axis to a power of two so jit shapes stay stable (and,
-    # under a mesh, further to a multiple of the device count)
-    plan_p = plan.pad_to(_pad_pow2(plan.n_jobs))
+    # pad the job axis onto the bucket grid so jit shapes stay stable
+    # (and, under a mesh, further to a multiple of the device count)
+    plan_p = plan.pad_to(graph_mod.pad_bucket(plan.n_jobs, lo=pad_lo))
     if mesh is not None:
         n_dev = mesh.devices.size
         plan_p = plan_p.pad_to(-(-plan_p.n_jobs // n_dev) * n_dev)
@@ -1045,6 +1166,7 @@ def answer_batch(index: TDRIndex,
         np.logical_or.at(answers, plan_p.qid[pending], True)
         return answers
     stats.exact_jobs += len(pending)
+    stats.exact_qids = np.unique(plan_p.qid[pending]).tolist()
     if len(pending) == 0:
         return answers
 
@@ -1052,6 +1174,12 @@ def answer_batch(index: TDRIndex,
     ex = _executor(index, eng)
     v_n = index.graph.n_vertices
     special = ex.special_labels(plan_p, pending)
+    if special_labels is not None:
+        # a serving pin fixes the label-class set (stable operand shapes,
+        # resident adjacency cache); union keeps it sound if traffic ever
+        # needs a label outside the pin
+        special = tuple(sorted(set(int(l) for l in special_labels)
+                               | set(special)))
     dev = None
     if exact_mode != "legacy":
         dev = PlanDevice(pd_u, pd_v, jnp.asarray(plan_p.req_labels),
@@ -1111,11 +1239,11 @@ def answer_batch(index: TDRIndex,
         rr += flag
         if dev_i is None:
             res = ex.dispatch_chunk(plan_p, dev, jobs, rows, special,
-                                    exact_mode)
+                                    exact_mode, pin_m)
         else:
             with jax.default_device(dev_i):
                 res = ex.dispatch_chunk(plan_p, dev, jobs, rows, special,
-                                        exact_mode)
+                                        exact_mode, pin_m)
         res.real_n = real_n
         results.append(res)
     for res in results:

@@ -1,71 +1,516 @@
-"""Batched decode serving driver.
+"""Continuous micro-batching PCR query server over the TDR index.
 
-Continuous-batching-lite: requests are gathered into fixed slot batches,
-prefilled together, then decoded step-by-step with greedy/temperature
-sampling; finished slots free for new requests.  Runs the reduced configs
-on CPU; the full configs are the ``decode_*`` dry-run cells.
+Online counterpart of ``tdr_query.answer_batch``: asynchronously arriving
+``(u, v, pattern)`` requests are coalesced into shape-bucketed batches and
+answered through ``tdr_query.answer_plan``, amortizing plan compilation,
+phase-1 cascade dispatch, and phase-2 expansion across every request in
+flight.  The design goal is **zero jit recompiles at steady state**:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch musicgen-large \
-      --reduced --requests 8 --new-tokens 16
+* **Job-budget coalescing.**  The scheduler drains the queue until the
+  *job* (DNF-term) budget ``ServeConfig.max_jobs`` is met or the batching
+  window ``max_wait_ms`` closes.  Term counts are known at submit time for
+  free — ``tdr_query.pattern_rows`` resolves each pattern against the
+  hash-consed plan cache — so a batch never overflows its top bucket.
+  (One exception: a single request with more DNF terms than ``max_jobs``
+  is served alone; it pads past the warmed grid and is counted in
+  ``ServeStats.overflow_batches`` rather than silently recompiling.)
+* **Bucket-grid shapes.**  ``answer_plan`` pads the job axis onto the
+  ``{2^k, 3·2^(k-1)}`` grid (``QueryPlan.pad_to`` / ``graph.pad_bucket``);
+  ``warmup`` pre-compiles every bucket of the grid up to ``max_jobs`` by
+  replaying probe queries padded to each size.
+* **Pinned statics.**  The two content-dependent jit statics are pinned
+  from the warmup sample: ``pin_m`` fixes the packed subset-state width
+  and (``pin_labels``) the special-label-class set is fixed for the
+  ``pallas`` backend's per-class adjacency — so batch composition changes
+  array *contents*, never shapes.  ``exact_mode`` defaults to ``"full"``:
+  serving trades the corridor-compaction win for hard shape stability and
+  zero per-batch host compaction work (the corridor still masks compute
+  on device).
+* **Caching.**  A bounded result cache keyed ``(u, v, canonical pattern)``
+  resolves repeats without touching the queue; duplicates *within* a
+  batch collapse onto one plan row set (fan-out at completion).
+* **Backpressure / admission control.**  The queue is bounded
+  (``max_queue``): blocking submits wait for room (closed-loop clients),
+  non-blocking submits raise ``QueueFull`` so open-loop front-ends can
+  shed load instead of growing an unbounded backlog.
+
+``repro.core.engine.jit_cache_entries`` counts compiled variants across
+the whole hot path; the serving benchmark asserts its delta over the
+measurement window is zero.
+
+  PYTHONPATH=src python -m repro.launch.serve --vertices 2000 \
+      --requests 2000 --clients 32
 """
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
+import threading
 import time
+from concurrent.futures import Future
+from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-import repro.configs as configs
-from repro.data import DataConfig, batch_for_step
-from repro.models import init_params, prefill
-from repro.train import make_serve_step
+from repro.core import engine as engine_mod
+from repro.core import graph as graph_mod
+from repro.core import pattern as pat
+from repro.core import tdr_build, tdr_query
 
 
-def serve_batch(cfg, params, prompts: jax.Array, media, new_tokens: int,
-                temperature: float = 0.0):
-    b, s = prompts.shape
-    serve = make_serve_step(cfg, temperature=temperature)
-    step_fn = jax.jit(serve)
-    last, cache = prefill(cfg, params, prompts, media,
-                          max_len=s + new_tokens)
-    tok = jnp.argmax(last, -1).astype(jnp.int32)
-    outs = [tok]
-    key = jax.random.PRNGKey(0)
-    for i in range(new_tokens - 1):
-        key, sub = jax.random.split(key)
-        tok, _, cache = step_fn(params, cache, tok, sub)
-        outs.append(tok)
-    return jnp.stack(outs, axis=1)          # [B, new_tokens]
+class QueueFull(RuntimeError):
+    """Admission control: the server's request queue is at ``max_queue``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_jobs: int = 256          # job-axis coalescing budget (grid top)
+    min_bucket: int = 16         # lowest job bucket (answer_plan's floor)
+    max_wait_ms: float = 2.0     # batching window after the first arrival
+    max_queue: int = 4096        # queued requests before backpressure
+    result_cache: int = 4096     # (u, v, pattern) entries; 0 disables
+    backend: str | None = None   # engine backend (None = contract default)
+    exact_mode: str = "full"     # hard shape stability (module docstring)
+    max_m: int = 4
+    pin_labels: bool = True      # pin the label-class set at warmup
+    exact_chunk: int = 32
+
+
+@dataclasses.dataclass
+class ServeStats:
+    submitted: int = 0
+    served: int = 0              # requests answered via a batch
+    batches: int = 0
+    jobs: int = 0                # plan rows over all served batches
+    cache_hits: int = 0          # resolved from the result cache
+    dedup_hits: int = 0          # collapsed onto an in-batch duplicate
+    rejected: int = 0            # non-blocking submits shed by admission
+    unpinned_batches: int = 0    # batches whose m exceeded the warmup pin
+    # batches padded past the warmed bucket grid (a single request with
+    # more DNF terms than max_jobs is still served, alone, but may
+    # compile a fresh bucket — visible here, not silently)
+    overflow_batches: int = 0
+    query_stats: "tdr_query.QueryStats" = dataclasses.field(
+        default_factory=tdr_query.QueryStats)
+
+    @property
+    def mean_batch(self) -> float:
+        return self.served / self.batches if self.batches else 0.0
+
+
+class _Request:
+    __slots__ = ("u", "v", "pattern", "rkey", "terms", "t_submit", "future")
+
+    def __init__(self, u, v, pattern, rkey, terms):
+        self.u = u
+        self.v = v
+        self.pattern = pattern
+        self.rkey = rkey
+        self.terms = terms
+        self.t_submit = time.perf_counter()
+        self.future: Future = Future()
+
+
+def _resolve(fut: Future, value=None, exc: BaseException | None = None):
+    """Complete a future a client may cancel concurrently: the
+    check-then-act window of ``cancelled()`` + ``set_result`` would raise
+    InvalidStateError out of the scheduler thread."""
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(value)
+    except Exception:   # cancelled (or already resolved) — client's loss
+        pass
+
+
+def bucket_grid(lo: int, hi: int) -> list[int]:
+    """The ``{2^k, 3·2^(k-1)}`` job buckets from ``lo`` up to covering
+    ``hi`` (the shapes ``answer_plan`` can produce for this server)."""
+    grid = []
+    b = graph_mod.pad_bucket(lo, lo=lo)
+    while True:
+        grid.append(b)
+        if b >= hi:
+            return grid
+        b = graph_mod.pad_bucket(b + 1, lo=lo)
+
+
+class QueryServer:
+    """Continuous micro-batching scheduler bound to one ``TDRIndex``.
+
+    ``submit`` hands back a ``concurrent.futures.Future[bool]``; a daemon
+    scheduler thread coalesces the queue into job-budgeted batches and
+    answers them through the plan cache + ``answer_plan``.  Use as a
+    context manager, or ``start()``/``stop()`` explicitly."""
+
+    def __init__(self, index: "tdr_build.TDRIndex",
+                 config: ServeConfig | None = None, **overrides):
+        cfg = config or ServeConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.index = index
+        self.config = cfg
+        self.stats = ServeStats()
+        self._queue: collections.deque[_Request] = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._results: collections.OrderedDict = collections.OrderedDict()
+        self._running = False
+        self._stopped = False
+        self._drain = True
+        self._thread: threading.Thread | None = None
+        self._pin_m: int | None = None
+        self._special: tuple[int, ...] | None = None
+        self._warmed_to = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "QueryServer":
+        if self._thread is not None:
+            return self
+        self._running = True
+        self._stopped = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="tdr-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler.  ``drain`` serves whatever is queued first;
+        otherwise queued futures are cancelled.  Later ``submit`` calls
+        raise (their futures could never resolve) until ``start`` again."""
+        thread = self._thread
+        if thread is None:
+            return
+        with self._lock:
+            self._drain = drain
+            self._running = False
+            self._stopped = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+        thread.join()
+        self._thread = None
+        with self._lock:
+            leftovers = list(self._queue)
+            self._queue.clear()
+        for req in leftovers:
+            req.future.cancel()
+
+    def __enter__(self) -> "QueryServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --------------------------------------------------------------- submit
+    def submit(self, u: int, v: int, p: pat.Pattern, *,
+               block: bool = True, timeout: float | None = None) -> Future:
+        """Enqueue one PCR query; the future resolves to ``bool``.
+
+        ``block=True`` waits for queue room (backpressure, closed-loop
+        clients); ``block=False`` raises ``QueueFull`` immediately when
+        the queue is at ``max_queue`` (admission control, open-loop
+        front-ends)."""
+        cfg = self.config
+        # resolving the pattern against the plan cache here (caller's
+        # thread) keeps DNF work off the scheduler thread and gives the
+        # term count the job-budget coalescer needs
+        rows = tdr_query.pattern_rows(self.index, p, cfg.max_m)
+        rkey = (int(u), int(v), pat.canonical_key(p))
+        req = _Request(int(u), int(v), p, rkey, rows.n_terms)
+        with self._lock:
+            if self._stopped:
+                # enqueueing into a dead queue would leave the future
+                # unresolved forever (requests *before* the first start()
+                # are fine: they queue until the scheduler spins up)
+                raise RuntimeError("QueryServer is stopped")
+            self.stats.submitted += 1
+            if cfg.result_cache:
+                hit = self._results.get(rkey)
+                if hit is not None:
+                    self._results.move_to_end(rkey)
+                    self.stats.cache_hits += 1
+                    req.future.set_result(hit)
+                    return req.future
+            deadline = None if timeout is None else \
+                time.perf_counter() + timeout
+            while len(self._queue) >= cfg.max_queue:
+                if not block or not self._running:
+                    self.stats.rejected += 1
+                    raise QueueFull(
+                        f"queue at max_queue={cfg.max_queue}")
+                rem = None if deadline is None else \
+                    deadline - time.perf_counter()
+                if rem is not None and rem <= 0:
+                    self.stats.rejected += 1
+                    raise QueueFull(
+                        f"queue at max_queue={cfg.max_queue} "
+                        f"(timed out after {timeout}s)")
+                self._not_full.wait(rem)
+            self._queue.append(req)
+            self._not_empty.notify()
+        return req.future
+
+    # --------------------------------------------------------------- warmup
+    def warmup(self, sample: Sequence[tuple[int, int, pat.Pattern]],
+               ) -> int:
+        """Pre-compile the serving shapes from a representative sample.
+
+        1. Answers the whole sample once, learning the pins: ``pin_m`` =
+           the widest require-set seen, and (``pin_labels``) the
+           special-label-class set over the sample's plan rows.
+        2. Picks *probe* queries — ones the filter cascade left for
+           phase 2 (``QueryStats.exact_qids``) — and replays them padded
+           to **every** bucket of the job grid up to ``max_jobs``, so
+           both the cascade and the expansion entry points compile at
+           every shape live traffic can produce.
+
+        Returns the number of compiled variants added (a second warmup
+        with the same sample returns 0)."""
+        cfg = self.config
+        idx = self.index
+        n0 = engine_mod.jit_cache_entries()
+        plan = tdr_query.compile_queries(idx, sample, max_m=cfg.max_m)
+        self._pin_m = int((plan.req_labels >= 0).sum(axis=1).max(initial=0))
+        if cfg.pin_labels and plan.n_jobs:
+            eng = idx.engine(cfg.backend)
+            ex = tdr_query._executor(idx, eng)
+            self._special = ex.special_labels(
+                plan, np.arange(plan.n_jobs, dtype=np.int64))
+        qstats = tdr_query.QueryStats()
+        self._answer(list(sample), stats=qstats)
+
+        # probe set: phase-2 survivors, capped to the smallest bucket so
+        # every padded replay keeps the same pending content
+        probes, jobs = [], 0
+        for qi in qstats.exact_qids:
+            u, v, p = sample[qi]
+            t = tdr_query.pattern_rows(idx, p, cfg.max_m).n_terms
+            if jobs + t > cfg.min_bucket:
+                break
+            probes.append((u, v, p))
+            jobs += t
+        if not probes and len(sample):
+            probes = list(sample[:1])
+        pplan = tdr_query.compile_queries(idx, probes, max_m=cfg.max_m)
+        top = graph_mod.pad_bucket(cfg.max_jobs, lo=cfg.min_bucket)
+        for b in bucket_grid(cfg.min_bucket, top):
+            if b < pplan.n_jobs:
+                continue
+            tdr_query.answer_plan(
+                idx, pplan.pad_to(b), exact_chunk=cfg.exact_chunk,
+                backend=cfg.backend, exact_mode=cfg.exact_mode,
+                special_labels=self._special, pin_m=self._pin_m,
+                pad_lo=cfg.min_bucket)
+        self._warmed_to = top
+        return engine_mod.jit_cache_entries() - n0
+
+    # ------------------------------------------------------------ scheduler
+    def _loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            if batch:
+                try:
+                    self._serve_batch(batch)
+                except Exception as exc:  # noqa: BLE001 — the scheduler
+                    # thread must never die silently: fail this batch's
+                    # futures and keep serving
+                    for req in batch:
+                        _resolve(req.future, exc=exc)
+
+    def _next_batch(self) -> list[_Request] | None:
+        """Block for the next coalesced batch (None = shut down).
+
+        Drains until the job budget is met or ``max_wait_ms`` has passed
+        since the first request of the batch — the continuous-batching
+        tradeoff between latency (short wait) and amortization (full
+        buckets)."""
+        cfg = self.config
+        with self._lock:
+            while not self._queue:
+                if not self._running:
+                    return None
+                self._not_empty.wait()
+            if not self._running and not self._drain:
+                return None
+            deadline = time.perf_counter() + cfg.max_wait_ms * 1e-3
+            batch: list[_Request] = []
+            jobs = 0
+            while True:
+                while self._queue:
+                    nxt = self._queue[0]
+                    if batch and jobs + nxt.terms > cfg.max_jobs:
+                        self._not_full.notify_all()
+                        return batch
+                    self._queue.popleft()
+                    batch.append(nxt)
+                    jobs += nxt.terms
+                    if jobs >= cfg.max_jobs:
+                        self._not_full.notify_all()
+                        return batch
+                self._not_full.notify_all()
+                rem = deadline - time.perf_counter()
+                if rem <= 0 or not self._running:
+                    return batch
+                self._not_empty.wait(rem)
+
+    def _serve_batch(self, batch: list[_Request]) -> None:
+        """Answer one coalesced batch: dedup → plan-cache compile →
+        ``answer_plan`` → fan results out to futures + result cache."""
+        cfg = self.config
+        uniq: dict = {}
+        fanout: dict = collections.defaultdict(list)
+        cached: list[tuple[_Request, bool]] = []
+        jobs_total = 0
+        with self._lock:
+            for req in batch:
+                if cfg.result_cache:
+                    hit = self._results.get(req.rkey)
+                    if hit is not None:
+                        self._results.move_to_end(req.rkey)
+                        self.stats.cache_hits += 1
+                        cached.append((req, hit))
+                        continue
+                if req.rkey in fanout:
+                    self.stats.dedup_hits += 1
+                else:
+                    jobs_total += req.terms
+                fanout[req.rkey].append(req)
+                uniq.setdefault(req.rkey, (req.u, req.v, req.pattern))
+        for req, hit in cached:
+            _resolve(req.future, hit)
+        if not uniq:
+            return
+        keys = list(uniq)
+        queries = [uniq[k] for k in keys]
+        try:
+            qstats = self.stats.query_stats
+            answers = self._answer(queries, stats=qstats)
+        except Exception as exc:  # noqa: BLE001 — surface on the futures
+            for k in keys:
+                for req in fanout[k]:
+                    _resolve(req.future, exc=exc)
+            return
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.served += sum(len(v) for v in fanout.values())
+            self.stats.jobs += jobs_total
+            if self._warmed_to and jobs_total and \
+                    graph_mod.pad_bucket(jobs_total, lo=cfg.min_bucket) \
+                    > self._warmed_to:
+                self.stats.overflow_batches += 1
+            if cfg.result_cache:
+                for k, ans in zip(keys, answers.tolist()):
+                    while len(self._results) >= cfg.result_cache:
+                        self._results.popitem(last=False)
+                    self._results[k] = ans
+        for k, ans in zip(keys, answers.tolist()):
+            for req in fanout[k]:
+                _resolve(req.future, ans)
+
+    def _answer(self, queries, stats=None) -> np.ndarray:
+        cfg = self.config
+        plan = tdr_query.compile_queries(self.index, queries,
+                                         max_m=cfg.max_m, stats=stats)
+        if self._pin_m is not None:
+            m = int((plan.req_labels >= 0).sum(axis=1).max(initial=0))
+            if m > self._pin_m:
+                self.stats.unpinned_batches += 1
+        return tdr_query.answer_plan(
+            self.index, plan, exact_chunk=cfg.exact_chunk, stats=stats,
+            backend=cfg.backend, exact_mode=cfg.exact_mode,
+            special_labels=self._special, pin_m=self._pin_m,
+            pad_lo=cfg.min_bucket)
+
+
+# ------------------------------------------------------------------- demo
+def percentile(xs: list[float], q: float) -> float:
+    """np.percentile with an empty-list guard — same estimator as the
+    benchmark rows, so demo and CI-gated numbers are comparable."""
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def mixed_pool(g, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pool = []
+    for i in range(n):
+        u = int(rng.integers(g.n_vertices))
+        v = int(rng.integers(g.n_vertices))
+        labs = rng.choice(g.n_labels, size=min(3, g.n_labels),
+                          replace=False).tolist()
+        p = [pat.all_of(labs[:2]), pat.any_of(labs),
+             pat.none_of(labs[:2]),
+             pat.parse(f"(l{labs[0]} | l{labs[1]}) & !l{labs[-1]}")][i % 4]
+        pool.append((u, v, p))
+    return pool
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="musicgen-large")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap = argparse.ArgumentParser(
+        description="TDR query-serving demo: closed-loop clients against "
+                    "the micro-batching scheduler")
+    ap.add_argument("--vertices", type=int, default=2_000)
+    ap.add_argument("--degree", type=float, default=1.5)
+    ap.add_argument("--labels", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=2_000)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--backend", default=None)
     args = ap.parse_args()
 
-    cfg = configs.get(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    dc = DataConfig(task="lm", vocab=cfg.vocab, seq_len=args.prompt_len,
-                    global_batch=args.requests,
-                    n_media_tokens=cfg.n_media_tokens, d_model=cfg.d_model)
-    batch = batch_for_step(dc, 0)
-    t0 = time.time()
-    out = serve_batch(cfg, params, batch["tokens"], batch.get("media"),
-                      args.new_tokens, args.temperature)
-    dt = time.time() - t0
-    total = args.requests * args.new_tokens
-    print(f"[serve] {args.requests} requests x {args.new_tokens} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s incl. compile)")
-    print("[serve] sample:", np.asarray(out[0])[:12].tolist())
+    g = graph_mod.erdos_renyi(args.vertices, args.degree, args.labels,
+                              seed=0)
+    print(f"[serve] ER graph |V|={g.n_vertices} |E|={g.n_edges}")
+    t0 = time.perf_counter()
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig(),
+                                backend=args.backend)
+    print(f"[serve] index build {time.perf_counter() - t0:.2f}s")
+
+    pool = mixed_pool(g, 256)
+    with QueryServer(idx, backend=args.backend) as server:
+        t0 = time.perf_counter()
+        added = server.warmup(pool)
+        print(f"[serve] warmup {time.perf_counter() - t0:.2f}s "
+              f"({added} jit variants compiled)")
+
+        n0 = engine_mod.jit_cache_entries()
+        lat: list[float] = []
+        lat_lock = threading.Lock()
+        rng = np.random.default_rng(1)
+        order = rng.integers(0, len(pool), size=args.requests)
+        split = np.array_split(order, args.clients)
+
+        def client(ids):
+            for i in ids:
+                u, v, p = pool[int(i)]
+                t = time.perf_counter()
+                server.submit(u, v, p).result()
+                with lat_lock:
+                    lat.append(time.perf_counter() - t)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(ids,))
+                   for ids in split]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        st = server.stats
+        print(f"[serve] {args.requests} requests / {args.clients} clients "
+              f"in {wall:.2f}s = {args.requests / wall:.0f} q/s")
+        print(f"[serve] p50={percentile(lat, 50) * 1e3:.1f}ms "
+              f"p95={percentile(lat, 95) * 1e3:.1f}ms "
+              f"p99={percentile(lat, 99) * 1e3:.1f}ms "
+              f"mean_batch={st.mean_batch:.1f} "
+              f"cache_hits={st.cache_hits} dedup={st.dedup_hits}")
+        print(f"[serve] recompiles after warmup: "
+              f"{engine_mod.jit_cache_entries() - n0}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,229 @@
+"""Serving scheduler: property tests against direct ``answer_batch``.
+
+The contract under test: **any** arrival order, batch-boundary split,
+result-cache state, duplicate mix (including ``u == v`` self-queries and
+repeated identical requests) must produce answers bit-identical to one
+direct ``answer_batch`` call over the same queries.  The scheduler's
+batching is driven deterministically here — ``_serve_batch`` on explicit
+splits — plus one threaded end-to-end pass through ``submit`` to cover
+the queue/condvar path.  Plan canonicalization gets its own equivalence
+property (hash-consing must never change semantics).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:  # clean container: vendored fallback (see _minihyp.py)
+    import _minihyp as hp
+    st = hp.strategies
+
+from repro.core import dfs_baseline, graph as G, pattern as pat
+from repro.core import tdr_build, tdr_query
+from repro.launch import serve
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+
+# built lazily at module scope (not a fixture) so the @given property
+# tests can use it too — the minihyp fallback's wrappers take no
+# arguments, so fixtures and strategies cannot mix there
+_CACHE: dict = {}
+
+
+def _served_graph():
+    if "gi" not in _CACHE:
+        g = G.random_graph("er", 40, 2.0, 4, seed=7)
+        _CACHE["gi"] = (g, tdr_build.build_index(g, CFG))
+    return _CACHE["gi"]
+
+
+@pytest.fixture(scope="module")
+def served_graph():
+    return _served_graph()
+
+
+def _query_pool(g, seed: int, n: int = 24):
+    """Mixed pool: all families, u==v self-queries, repeated patterns."""
+    rng = np.random.default_rng(seed)
+    pool = []
+    for i in range(n):
+        u = int(rng.integers(g.n_vertices))
+        v = u if i % 6 == 5 else int(rng.integers(g.n_vertices))
+        labs = rng.choice(g.n_labels, size=2, replace=False).tolist()
+        kind = i % 5
+        if kind == 0:
+            p = pat.all_of(labs)
+        elif kind == 1:
+            p = pat.any_of(labs)
+        elif kind == 2:
+            p = pat.none_of(labs)
+        elif kind == 3:
+            p = pat.parse(f"l{labs[0]} & !l{labs[1]}")
+        else:
+            p = pat.lcr(labs, g.n_labels)
+        pool.append((u, v, p))
+    return pool
+
+
+def _drive(server, requests):
+    """Feed requests through the scheduler core on explicit batch
+    boundaries (deterministic, no timing): returns per-request answers."""
+    futs = []
+    for batch in requests:
+        reqs = []
+        for (u, v, p) in batch:
+            rows = tdr_query.pattern_rows(server.index, p,
+                                          server.config.max_m)
+            req = serve._Request(u, v, p, (u, v, pat.canonical_key(p)),
+                                 rows.n_terms)
+            reqs.append(req)
+            futs.append(req.future)
+        server._serve_batch(reqs)
+    return [f.result(timeout=30) for f in futs]
+
+
+@hp.given(seed=st.integers(0, 10_000),
+          splits=st.lists(st.integers(1, 8), min_size=1, max_size=6),
+          dup=st.booleans(), cache=st.booleans())
+@hp.settings(max_examples=12, deadline=None)
+def test_any_split_matches_direct(seed, splits, dup, cache):
+    """Arrival order + batch-boundary splits + cache state never change
+    answers vs a single direct answer_batch call."""
+    g, idx = _served_graph()
+    rng = np.random.default_rng(seed)
+    pool = _query_pool(g, seed)
+    order = rng.permutation(len(pool)).tolist()
+    if dup:   # duplicates, some landing in the same batch, some across
+        order = order + order[::2]
+    queries = [pool[i] for i in order]
+
+    server = serve.QueryServer(idx, result_cache=64 if cache else 0)
+    # split the stream on the drawn boundaries (cycled until exhausted)
+    batches, i, si = [], 0, 0
+    while i < len(queries):
+        n = splits[si % len(splits)]
+        batches.append(queries[i:i + n])
+        i += n
+        si += 1
+    got = _drive(server, batches)
+    want = tdr_query.answer_batch(idx, queries).tolist()
+    assert got == want
+    # a replay over a warm result cache must also agree
+    if cache:
+        again = _drive(server, [queries])
+        assert again == want
+
+
+def test_dedup_and_cache_counted(served_graph):
+    g, idx = served_graph
+    q = _query_pool(g, 3)[0]
+    server = serve.QueryServer(idx, result_cache=16)
+    got = _drive(server, [[q, q, q]])
+    assert got == [got[0]] * 3
+    assert server.stats.dedup_hits == 2
+    before = server.stats.cache_hits
+    got2 = _drive(server, [[q]])
+    assert got2 == [got[0]]
+    assert server.stats.cache_hits == before + 1
+
+
+def test_threaded_submit_matches_direct(served_graph):
+    """End-to-end through submit(): concurrent clients, real scheduler
+    thread, mixed duplicates — equal to the direct call."""
+    g, idx = served_graph
+    pool = _query_pool(g, 11, n=30)
+    want = tdr_query.answer_batch(idx, pool).tolist()
+    with serve.QueryServer(idx, max_wait_ms=1.0, result_cache=32) as srv:
+        srv.warmup(pool[:8])
+        results = {}
+        lock = threading.Lock()
+
+        def client(ids):
+            for i in ids:
+                u, v, p = pool[i]
+                got = srv.submit(u, v, p).result(timeout=60)
+                with lock:
+                    results.setdefault(i, []).append(got)
+
+        shards = [list(range(j, len(pool), 4)) + [0, 1] for j in range(4)]
+        threads = [threading.Thread(target=client, args=(s,))
+                   for s in shards]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for i, vals in results.items():
+        assert all(v == want[i] for v in vals), (i, vals, want[i])
+
+
+def test_admission_control(served_graph):
+    g, idx = served_graph
+    q = _query_pool(g, 5)[0]
+    server = serve.QueryServer(idx, max_queue=2, result_cache=0)
+    # scheduler not started: the queue fills and non-blocking submits shed
+    server.submit(*q, block=False)
+    server.submit(*q, block=False)
+    with pytest.raises(serve.QueueFull):
+        server.submit(*q, block=False)
+    assert server.stats.rejected == 1
+    with pytest.raises(serve.QueueFull):
+        server.submit(*q, block=True, timeout=0.01)
+    # draining on start answers the backlog
+    server.start()
+    server.stop(drain=True)
+
+
+def test_pinned_plan_matches_unpinned(served_graph):
+    """pin_m / special_labels pins change shapes, never answers."""
+    g, idx = served_graph
+    pool = _query_pool(g, 17)
+    plan = tdr_query.compile_queries(idx, pool)
+    want = tdr_query.answer_plan(idx, plan).tolist()
+    for pin_m in (1, 2, 4):
+        got = tdr_query.answer_plan(
+            idx, plan, pin_m=pin_m,
+            special_labels=tuple(range(g.n_labels)),
+            exact_mode="full").tolist()
+        assert got == want
+    oracle = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in pool]
+    assert want == oracle
+
+
+def test_canonicalize_equivalence():
+    """Hash-consing: canonical form is interned, key-stable, and
+    semantically identical to the original pattern."""
+    rng = np.random.default_rng(0)
+
+    def rand_pat(depth=3):
+        k = int(rng.integers(4)) if depth else 0
+        if k == 0:
+            return pat.label(int(rng.integers(4)))
+        if k == 1:
+            return pat.not_(rand_pat(depth - 1))
+        kids = tuple(rand_pat(depth - 1)
+                     for _ in range(int(rng.integers(1, 4))))
+        return pat.And(kids) if k == 2 else pat.Or(kids)
+
+    import itertools
+    for _ in range(60):
+        p = rand_pat()
+        c = pat.canonicalize(p)
+        assert pat.canonicalize(c) is pat.canonicalize(p)
+        assert pat.canonical_key(c) == pat.canonical_key(p)
+        labs = sorted(pat.labels_of(p))
+        for bits in itertools.product((False, True), repeat=len(labs)):
+            present = frozenset(l for l, b in zip(labs, bits) if b)
+            assert pat.evaluate(p, present) == pat.evaluate(c, present)
+
+
+def test_plan_cache_hits(served_graph):
+    g, idx = served_graph
+    p = pat.all_of([0, 1])
+    stats = tdr_query.QueryStats()
+    tdr_query.compile_queries(idx, [(0, 1, p), (2, 3, p), (1, 1, p)],
+                              stats=stats)
+    assert stats.plan_lookups == 3
+    assert stats.plan_misses <= 1   # one DNF expansion serves all three

@@ -25,7 +25,7 @@ import json
 from repro.core import engine as engine_mod
 
 from . import (common, index_cost, kernels_bench, lcr_bench, queries,
-               scalability, serving, synthetic_sweeps)
+               scalability, serving, synthetic_sweeps, updates)
 
 MODULES = [
     ("tableIII", queries),
@@ -35,6 +35,7 @@ MODULES = [
     ("fig6", scalability),
     ("kernels", kernels_bench),
     ("serving", serving),
+    ("updates", updates),
 ]
 
 

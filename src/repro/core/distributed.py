@@ -327,6 +327,10 @@ def build_index(graph: Graph, cfg: "build_mod.TDRConfig | None" = None, *,
         g_count=jnp.asarray(g_count),
         vtx_words=vtx_words_np, lab_slot=lab_slot,
         fixpoint_rounds=int(rounds.max()),
+        # pin the hash layout so tdr_build.update_index on a
+        # distributed-built index can fall back to a layout-pinned
+        # rebuild (the sharded build keeps no raw closure planes)
+        disc=disc,
     )
     return idx
 

@@ -58,30 +58,37 @@ Pattern = Union[Label, Not, And, Or]
 
 
 def label(i: int) -> Pattern:
+    """Atomic pattern: a path must carry an edge with label id ``i``."""
     return Label(i)
 
 
 def and_(*ps: Pattern) -> Pattern:
+    """Conjunction node over already-built pattern ASTs."""
     return And(tuple(ps))
 
 
 def or_(*ps: Pattern) -> Pattern:
+    """Disjunction node over already-built pattern ASTs."""
     return Or(tuple(ps))
 
 
 def not_(p: Pattern) -> Pattern:
+    """Negation node (the NOT operator of the paper's pattern algebra)."""
     return Not(p)
 
 
 def all_of(labels: Sequence[int]) -> Pattern:
+    """AND-query: the path must carry *every* label id in ``labels``."""
     return And(tuple(Label(i) for i in labels))
 
 
 def any_of(labels: Sequence[int]) -> Pattern:
+    """OR-query: the path must carry *some* label id in ``labels``."""
     return Or(tuple(Label(i) for i in labels))
 
 
 def none_of(labels: Sequence[int]) -> Pattern:
+    """NOT-query: the path must avoid *every* label id in ``labels``."""
     return And(tuple(Not(Label(i)) for i in labels))
 
 
@@ -108,6 +115,7 @@ def evaluate(p: Pattern, present: FrozenSet[int]) -> bool:
 
 
 def labels_of(p: Pattern) -> FrozenSet[int]:
+    """Set of label ids mentioned anywhere in the pattern AST."""
     if isinstance(p, Label):
         return frozenset((p.index,))
     if isinstance(p, Not):

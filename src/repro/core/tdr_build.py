@@ -32,6 +32,8 @@ plus an optional second multiplicative hash (Bloom double-hashing).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any
 
 import jax
@@ -40,7 +42,7 @@ import numpy as np
 
 from . import bitset
 from . import engine as engine_mod
-from .graph import Graph
+from .graph import Graph, GraphDelta, csr_row_edges, pad_bucket
 
 
 # ---------------------------------------------------------------- config
@@ -89,6 +91,24 @@ class TDRIndex:
     # per-mesh replicated copies of the query-side planes (the distributed
     # cascade broadcasts them once per mesh, not once per batch)
     _replicated: dict = dataclasses.field(default_factory=dict, repr=False)
+    # ---- incremental-maintenance state (see update_index) ----
+    # The hash layout is *frozen* at first build: ``disc`` pins the
+    # discovery-order vertex hashing so updated indexes stay comparable
+    # bit-for-bit with ``build_index(new_graph, layout=disc)``.  The raw
+    # closure/base/vertical planes are retained so updates can warm-start
+    # the fixpoints and patch only affected rows; ``None`` on indexes that
+    # predate PR 5 or came from a path that does not populate them (the
+    # distributed build keeps only ``disc`` — updates fall back to a
+    # layout-pinned rebuild there).
+    disc: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    base_v: Any = dataclasses.field(default=None, repr=False)  # [V, Wv]
+    base_l: Any = dataclasses.field(default=None, repr=False)  # [V, Wl]
+    base_r: Any = dataclasses.field(default=None, repr=False)  # [V, Wv]
+    r_vtx: Any = dataclasses.field(default=None, repr=False)   # [V, Wv]
+    r_lab: Any = dataclasses.field(default=None, repr=False)   # [V, Wl]
+    r_in: Any = dataclasses.field(default=None, repr=False)    # [V, Wv]
+    d_vtx: Any = dataclasses.field(default=None, repr=False)   # [V, k, Wv]
+    d_lab: Any = dataclasses.field(default=None, repr=False)   # [V, k, Wl]
 
     @property
     def vtx_packed(self) -> jax.Array:
@@ -278,7 +298,7 @@ def way_assignment(cfg: TDRConfig, graph: Graph,
 def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
                 backend: str | None = None,
                 engine_config: "engine_mod.EngineConfig | None" = None,
-                mesh=None) -> TDRIndex:
+                mesh=None, layout: np.ndarray | None = None) -> TDRIndex:
     """Construct the full TDR index for every vertex of ``graph``.
 
     All semiring math runs through the packed-word engine; ``backend``
@@ -287,12 +307,28 @@ def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
     ``jax.sharding.Mesh``) routes to the vertex-sharded distributed build
     (``repro.core.distributed.build_index``) — bit-identical planes, with
     the per-round exchange packed uint32 words.
+
+    ``layout`` pins the discovery-order hash layout (an int32 ``[V]``
+    array, normally ``TDRIndex.disc`` of an earlier build over the same
+    vertex set) instead of deriving it from this graph's DFS forest.
+    Incremental maintenance (``update_index``) freezes that layout, so a
+    from-scratch rebuild is bit-identical to an updated index exactly
+    when it pins the same one.  DFS push/pop intervals are *always*
+    recomputed from ``graph`` — they are exact structure, not hashing.
     """
     if mesh is not None:
+        if layout is not None:
+            raise ValueError("layout pinning is single-device only; the "
+                             "distributed build derives its own")
         from . import distributed  # deferred: distributed imports us back
         return distributed.build_index(graph, cfg, mesh=mesh)
-    v_n, e_n = graph.n_vertices, graph.n_edges
+    v_n = graph.n_vertices
     push, pop, disc = dfs_intervals(graph)
+    if layout is not None:
+        disc = np.asarray(layout, dtype=np.int32)
+        if disc.shape != (v_n,):
+            raise ValueError(
+                f"layout must be an int [{v_n}] discovery-order array")
     vtx_words_np = _vertex_bit_words(cfg, disc)
     lab_slot = _label_slots(cfg, graph.n_labels)
     g_count, way = way_assignment(cfg, graph, disc)
@@ -302,26 +338,42 @@ def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
     eng = engine_mod.make_engine(graph, backend=backend,
                                  config=engine_config)
 
-    src, dst = eng.edge_src, eng.edge_dst
     vtx_w = jnp.asarray(vtx_words_np)                     # [V, Wv]
     lab_w = jnp.asarray(_edge_label_words(cfg, lab_slot, graph.labels))
-    null_w = jnp.asarray(_null_words(cfg))                # [Wl]
-    deg = jnp.asarray(graph.out_degree())
-    is_leaf = deg == 0
-
     max_iters = cfg.max_fixpoint_iters or v_n
 
-    # ---- forward vertex closure  R[u] = OR (bit(v) | R[v]) --------------
-    base_v = eng.propagate(vtx_w)
+    # ---- the three closure fixpoints (forward vtx/lab, reverse) --------
+    base_v = eng.propagate(vtx_w)         # R[u] = OR (bit(v) | R[v])
     r_vtx, rounds = eng.closure(base_v, max_iters=max_iters)
-
-    # ---- forward label closure  Rl[u] = OR (bit(l) | Rl[v]) -------------
-    base_l = eng.segment_or(lab_w, src, v_n)
+    base_l = eng.segment_or(lab_w, eng.edge_src, v_n)
     r_lab, _ = eng.closure(base_l, max_iters=max_iters)
-
-    # ---- reverse closure for N_in ---------------------------------------
     base_r = eng.propagate(vtx_w, reverse=True)
-    n_in, _ = eng.closure(base_r, reverse=True, max_iters=max_iters)
+    r_in, _ = eng.closure(base_r, reverse=True, max_iters=max_iters)
+
+    idx = _assemble_planes(graph, cfg, eng, vtx_w=vtx_w, lab_w=lab_w,
+                           base_v=base_v, base_l=base_l, base_r=base_r,
+                           r_vtx=r_vtx, r_lab=r_lab, r_in=r_in,
+                           g_count=g_count, way=way, push=push, pop=pop,
+                           disc=disc, vtx_words_np=vtx_words_np,
+                           lab_slot=lab_slot, rounds=int(rounds))
+    idx._engines[eng.backend] = eng
+    return idx
+
+
+def _assemble_planes(graph: Graph, cfg: TDRConfig, eng, *, vtx_w, lab_w,
+                     base_v, base_l, base_r, r_vtx, r_lab, r_in, g_count,
+                     way, push, pop, disc, vtx_words_np, lab_slot,
+                     rounds: int) -> TDRIndex:
+    """Shared tail of Alg. 1: vertical k-level propagation + per-way
+    projections + index wrap-up, given already-converged closures.
+
+    Used by the from-scratch build and by ``update_index`` when the
+    affected-row set is too large for row patching (the closures still
+    warm-started — only the tail recomputes fully)."""
+    v_n = graph.n_vertices
+    src, dst = eng.edge_src, eng.edge_dst
+    null_w = jnp.asarray(_null_words(cfg))                # [Wl]
+    is_leaf = jnp.asarray(graph.out_degree()) == 0
 
     # ---- vertical levels (exact k-round propagation) --------------------
     d_lab_levels = []   # D_lab[:, l] — labels at hop l+1 from each vertex
@@ -358,8 +410,8 @@ def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
     wl = lab_w.shape[-1]
     h_vtx = h_vtx.reshape(v_n, gmax, wv)
     h_lab = h_lab.reshape(v_n, gmax, wl)
-    v_lab = jnp.stack(v_lab_lv, axis=1).reshape(v_n, gmax, cfg.k, wl)
-    v_vtx = jnp.stack(v_vtx_lv, axis=1).reshape(v_n, gmax, cfg.k, wv)
+    v_lab_p = jnp.stack(v_lab_lv, axis=1).reshape(v_n, gmax, cfg.k, wl)
+    v_vtx_p = jnp.stack(v_vtx_lv, axis=1).reshape(v_n, gmax, cfg.k, wv)
 
     # the vertex hashes itself into each *used* way (paper Alg. 1 line 10)
     way_used = jnp.arange(gmax)[None, :] < jnp.asarray(g_count)[:, None]
@@ -369,14 +421,371 @@ def build_index(graph: Graph, cfg: TDRConfig = TDRConfig(), *,
     n_out = bitset.or_reduce(h_vtx, axis=1) if gmax > 0 else r_vtx
     n_out = n_out | vtx_w  # self is "reachable" for membership filtering
 
-    idx = TDRIndex(
+    return TDRIndex(
         cfg=cfg, graph=graph,
-        h_vtx=h_vtx, h_lab=h_lab, v_vtx=v_vtx, v_lab=v_lab,
-        n_out=n_out, n_in=n_in | vtx_w,
+        h_vtx=h_vtx, h_lab=h_lab, v_vtx=v_vtx_p, v_lab=v_lab_p,
+        n_out=n_out, n_in=r_in | vtx_w,
         push=jnp.asarray(push), pop=jnp.asarray(pop),
         g_count=jnp.asarray(g_count),
         vtx_words=vtx_words_np, lab_slot=lab_slot,
-        fixpoint_rounds=int(rounds),
-    )
-    idx._engines[eng.backend] = eng
-    return idx
+        fixpoint_rounds=rounds, disc=disc,
+        base_v=base_v, base_l=base_l, base_r=base_r,
+        r_vtx=r_vtx, r_lab=r_lab, r_in=r_in, d_vtx=d_vtx, d_lab=d_lab)
+
+
+# ------------------------------------------------------ incremental update
+@dataclasses.dataclass
+class UpdateStats:
+    """Counters filled by one ``update_index`` call.
+
+    ``mode`` is "noop" | "incremental" | "rebuild"; ``tail`` refines the
+    incremental path: "patch" (row-granular plane rewrite) or "full" (the
+    shared build tail, when the affected-row set crossed the threshold
+    but the closures still warm-started)."""
+    mode: str = ""
+    tail: str = ""
+    n_added: int = 0
+    n_removed: int = 0
+    dirty_fwd: int = 0     # rows re-seeded in the forward closures
+    dirty_rev: int = 0     # rows re-seeded in the reverse closure
+    changed_rows: int = 0  # rows whose closure words actually changed
+    patch_rows: int = 0    # rows re-derived by the plane patch
+    rounds: int = 0        # warm-start rounds of the forward fixpoint
+    wall_s: float = 0.0
+
+
+def _bfs_mask(indptr: np.ndarray, indices: np.ndarray, seeds,
+              v_n: int) -> np.ndarray:
+    """Reachable-set bool [V] from ``seeds`` (inclusive) over one CSR —
+    the host-side over-invalidation probe for deletions."""
+    seen = np.zeros(v_n, dtype=bool)
+    frontier = np.unique(np.asarray(seeds, dtype=np.int64))
+    while frontier.size:
+        seen[frontier] = True
+        nbr = indices[csr_row_edges(indptr, frontier)]
+        frontier = np.unique(nbr[~seen[nbr]])
+    return seen
+
+
+def _pad_patch(rows: np.ndarray, v_n: int, lo: int = 8) -> np.ndarray:
+    """Pad a patch-row id list onto the ``{2^k, 3*2^(k-1)}`` bucket grid.
+    Padding slots hold the out-of-range sentinel ``v_n`` — jax drops
+    out-of-bounds scatter rows, so padded writes vanish."""
+    rp = pad_bucket(max(rows.shape[0], 1), lo=lo)
+    out = np.full(rp, v_n, dtype=np.int32)
+    out[:rows.shape[0]] = rows
+    return out
+
+
+def _pad_edges(arrs: list, e_n: int, lo: int = 8):
+    """Pad per-edge patch operands to a bucket; returns (padded arrays,
+    uint32 [Ep, 1] validity mask ANDed into every gathered value so the
+    padding contributes nothing to the ORs)."""
+    ep = pad_bucket(max(e_n, 1), lo=lo)
+    valid = np.zeros((ep, 1), dtype=np.uint32)
+    valid[:e_n] = np.uint32(0xFFFFFFFF)
+    out = []
+    for a in arrs:
+        pad_shape = (ep - e_n,) + a.shape[1:]
+        out.append(np.concatenate([a, np.zeros(pad_shape, a.dtype)]))
+    return out, valid
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words",))
+def _patch_bases(base_v, base_l, base_r, vtx_w, rows_o, spos_o, dst_o,
+                 labw_o, valid_o, rows_i, dpos_i, src_i, valid_i, *,
+                 chunk_words: int):
+    """Re-derive the one-hop base planes for the rows whose edge set
+    changed: out-edge rows for ``base_v``/``base_l``, in-edge rows for
+    ``base_r``.  All operands packed uint32; shapes bucket-padded."""
+    ro = rows_o.shape[0]
+    bv = bitset.segment_or_words(vtx_w[dst_o] & valid_o, spos_o,
+                                 num_segments=ro, chunk_words=chunk_words)
+    bl = bitset.segment_or_words(labw_o & valid_o, spos_o,
+                                 num_segments=ro, chunk_words=chunk_words)
+    ri = rows_i.shape[0]
+    br = bitset.segment_or_words(vtx_w[src_i] & valid_i, dpos_i,
+                                 num_segments=ri, chunk_words=chunk_words)
+    return (base_v.at[rows_o].set(bv), base_l.at[rows_o].set(bl),
+            base_r.at[rows_i].set(br))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "gmax", "chunk_words"))
+def _patch_tail(d_vtx, d_lab, h_vtx, h_lab, v_vtx, v_lab, base_v2, base_l2,
+                r_vtx2, r_lab2, r_in2, vtx_w, null_w, leaf_full, rows,
+                leaf_rows, g_rows, spos, dst, labw, way, valid, *,
+                k: int, gmax: int, chunk_words: int):
+    """Row-granular rewrite of the vertical planes and per-way
+    projections for the affected rows only (``rows``, bucket-padded with
+    the dropped sentinel).  ``spos`` renumbers each subset edge's source
+    to its position in ``rows``; every gathered value is masked by
+    ``valid`` so edge padding is inert.  Exactness: a recomputed row uses
+    the same formula as the full build over the same (patched) operands,
+    and rows outside the patch set are provably unchanged."""
+    r = rows.shape[0]
+
+    def seg_rows(vals):
+        return bitset.segment_or_words(vals & valid, spos, num_segments=r,
+                                       chunk_words=chunk_words)
+
+    # vertical planes: level 0 *is* the (already patched) base planes
+    d_vtx2 = d_vtx.at[:, 0].set(base_v2)
+    d_lab2 = d_lab.at[:, 0].set(jnp.where(leaf_full[:, None],
+                                          null_w[None, :], base_l2))
+    for l in range(1, k):
+        row_l = seg_rows(d_lab2[dst, l - 1])
+        row_l = jnp.where(leaf_rows[:, None], null_w[None, :], row_l)
+        d_lab2 = d_lab2.at[rows, l].set(row_l)
+        row_v = seg_rows(d_vtx2[dst, l - 1])
+        row_v = jnp.where(leaf_rows[:, None], jnp.uint32(0), row_v)
+        d_vtx2 = d_vtx2.at[rows, l].set(row_v)
+
+    # per-way projections over the affected rows
+    seg = spos * gmax + way
+
+    def proj(vals):
+        return bitset.segment_or_words(vals & valid, seg,
+                                       num_segments=r * gmax,
+                                       chunk_words=chunk_words)
+
+    wv = vtx_w.shape[-1]
+    wl = null_w.shape[-1]
+    hv = proj(vtx_w[dst] | r_vtx2[dst]).reshape(r, gmax, wv)
+    hl = proj(labw | r_lab2[dst]).reshape(r, gmax, wl)
+    vl_lv = [proj(labw)]
+    vv_lv = [proj(vtx_w[dst])]
+    for l in range(1, k):
+        vl_lv.append(proj(d_lab2[dst, l - 1]))
+        vv_lv.append(proj(d_vtx2[dst, l - 1]))
+    vl = jnp.stack(vl_lv, axis=1).reshape(r, gmax, k, wl)
+    vv = jnp.stack(vv_lv, axis=1).reshape(r, gmax, k, wv)
+    way_used = jnp.arange(gmax)[None, :] < g_rows[:, None]
+    hv = hv | jnp.where(way_used[:, :, None], vtx_w[rows][:, None, :],
+                        jnp.uint32(0))
+    h_vtx2 = h_vtx.at[rows].set(hv)
+    h_lab2 = h_lab.at[rows].set(hl)
+    v_vtx2 = v_vtx.at[rows].set(vv)
+    v_lab2 = v_lab.at[rows].set(vl)
+    n_out2 = bitset.or_reduce(h_vtx2, axis=1) | vtx_w
+    n_in2 = r_in2 | vtx_w
+    return d_vtx2, d_lab2, h_vtx2, h_lab2, v_vtx2, v_lab2, n_out2, n_in2
+
+
+def update_index(index: TDRIndex, delta: "GraphDelta | None" = None, *,
+                 edges_added=(), edges_removed=(),
+                 rebuild_threshold: float = 0.5,
+                 backend: str | None = None,
+                 engine_config: "engine_mod.EngineConfig | None" = None,
+                 stats: UpdateStats | None = None) -> TDRIndex:
+    """Maintain the TDR index under edge insertions/deletions.
+
+    Returns a *new* ``TDRIndex`` over ``delta.graph`` (``index`` is left
+    untouched, so in-flight readers stay consistent); planes are
+    bit-identical to ``build_index(delta.graph, cfg,
+    layout=index.disc)`` — the frozen-layout rebuild — on every plane.
+    ``delta`` is a ``graph.GraphDelta`` from ``Graph.apply_updates``;
+    alternatively pass raw ``edges_added``/``edges_removed`` triples.
+
+    Strategy (packed-word delta propagation):
+
+    * **Insertions are monotone** under the OR semiring: the one-hop base
+      planes are re-derived for the touched rows only, and the three
+      closure fixpoints re-enter ``engine.closure`` *from the previous
+      converged state* — the unique least fixpoint is reached in however
+      many rounds the delta needs to drain (typically 1-2) instead of a
+      diameter's worth.
+    * **Deletions are not**: every vertex that could reach a removed
+      edge's source (old-graph reachability, a sound superset computed by
+      host BFS) is over-invalidated — its closure rows reset to the new
+      base — and the same warm fixpoint re-converges them.  When the
+      dirty set exceeds ``rebuild_threshold * V`` the update falls back
+      to a full (still layout-pinned) rebuild.
+    * **Plane patching**: the vertical k-level planes and per-way
+      projections are rewritten only for rows that can differ — touched
+      sources, the radius-k predecessor ball, and predecessors of rows
+      whose closure words actually changed (one device compare) — unless
+      that set also crosses the threshold, in which case the shared build
+      tail recomputes them in full (closure savings kept either way).
+
+    The hash layout (``disc`` and everything derived from it) stays
+    frozen across updates; DFS push/pop intervals and way routing are
+    recomputed from the new graph exactly as the pinned rebuild would.
+    """
+    t0 = time.perf_counter()
+    st = stats if stats is not None else UpdateStats()
+    if delta is None:
+        delta = index.graph.apply_updates(edges_added, edges_removed)
+    if not isinstance(delta, GraphDelta):
+        raise TypeError("delta must be a graph.GraphDelta "
+                        "(the result of Graph.apply_updates)")
+    g2 = delta.graph
+    if (g2.n_vertices != index.graph.n_vertices
+            or g2.n_labels != index.graph.n_labels):
+        raise ValueError("updates must preserve the vertex/label universe")
+    st.n_added = int(delta.added.shape[0])
+    st.n_removed = int(delta.removed.shape[0])
+    if delta.n_changes == 0:
+        st.mode = "noop"
+        st.wall_s = time.perf_counter() - t0
+        return index
+
+    cfg = index.cfg
+    v_n = g2.n_vertices
+    aux_ok = (index.disc is not None and index.base_v is not None
+              and index.r_vtx is not None and index.d_vtx is not None
+              and cfg.g_max > 0)
+
+    def rebuild():
+        st.mode = "rebuild"
+        idx2 = build_index(g2, cfg, backend=backend,
+                           engine_config=engine_config, layout=index.disc)
+        st.wall_s = time.perf_counter() - t0
+        return idx2
+
+    if not aux_ok:
+        return rebuild()
+
+    # ---- deletion over-invalidation scope (host BFS, sound superset) ----
+    if st.n_removed:
+        rev_old = index.graph.reverse()
+        d_fwd = _bfs_mask(rev_old.indptr, rev_old.indices,
+                          delta.removed[:, 0], v_n)
+        d_rev = _bfs_mask(index.graph.indptr, index.graph.indices,
+                          delta.removed[:, 1], v_n)
+    else:
+        d_fwd = np.zeros(v_n, dtype=bool)
+        d_rev = d_fwd
+    st.dirty_fwd = int(d_fwd.sum())
+    st.dirty_rev = int(d_rev.sum())
+    # inclusive compare: rebuild_threshold=0 always rebuilds, >=1 never
+    # does on the dirty check (the patch-scope check below still can)
+    if max(st.dirty_fwd, st.dirty_rev) >= rebuild_threshold * v_n:
+        return rebuild()
+
+    st.mode = "incremental"
+    key = engine_mod.resolve_backend(
+        backend or (engine_config.backend if engine_config else "auto"))
+    old_eng = index._engines.get(key)
+    if old_eng is not None and old_eng.graph is index.graph:
+        eng = old_eng.apply_delta(g2, delta.added, delta.removed)
+    else:
+        ecfg = engine_config or engine_mod.EngineConfig(
+            bit_chunk=cfg.bit_chunk)
+        eng = engine_mod.make_engine(g2, backend=key, config=ecfg)
+
+    push, pop, _ = dfs_intervals(g2)     # intervals track the new forest
+    g_count, way = way_assignment(cfg, g2, index.disc)  # frozen hashing
+    vtx_w = index.vtx_packed
+    cw = eng.config.chunk_words
+    src2 = g2.src
+
+    # ---- one-hop base planes: re-derive touched rows only ---------------
+    s_all = np.unique(np.concatenate([delta.added[:, 0],
+                                      delta.removed[:, 0]]))
+    t_all = np.unique(np.concatenate([delta.added[:, 1],
+                                      delta.removed[:, 1]]))
+    s_mask = np.zeros(v_n, dtype=bool)
+    s_mask[s_all] = True
+    keep_o = s_mask[src2]
+    so, do, lo_ = src2[keep_o], g2.indices[keep_o], g2.labels[keep_o]
+    (spos_o, do_p, labw_o), valid_o = _pad_edges(
+        [np.searchsorted(s_all, so).astype(np.int32), do.astype(np.int32),
+         _edge_label_words(cfg, index.lab_slot, lo_)], so.shape[0])
+    t_mask = np.zeros(v_n, dtype=bool)
+    t_mask[t_all] = True
+    keep_i = t_mask[g2.indices]
+    si, di = src2[keep_i], g2.indices[keep_i]
+    (dpos_i, si_p), valid_i = _pad_edges(
+        [np.searchsorted(t_all, di).astype(np.int32),
+         si.astype(np.int32)], si.shape[0])
+    base_v2, base_l2, base_r2 = _patch_bases(
+        index.base_v, index.base_l, index.base_r, vtx_w,
+        jnp.asarray(_pad_patch(s_all, v_n)), jnp.asarray(spos_o),
+        jnp.asarray(do_p), jnp.asarray(labw_o), jnp.asarray(valid_o),
+        jnp.asarray(_pad_patch(t_all, v_n)), jnp.asarray(dpos_i),
+        jnp.asarray(si_p), jnp.asarray(valid_i), chunk_words=cw)
+
+    # ---- warm-start closures (fwd vtx+lab fused along the word axis) ----
+    wv = int(index.base_v.shape[-1])
+    max_iters = cfg.max_fixpoint_iters or v_n
+    dm = jnp.asarray(d_fwd)
+    old_f = jnp.concatenate([index.r_vtx, index.r_lab], axis=1)
+    f0 = jnp.concatenate(
+        [jnp.where(dm[:, None], base_v2, index.r_vtx) | base_v2,
+         jnp.where(dm[:, None], base_l2, index.r_lab) | base_l2], axis=1)
+    rf, rounds = eng.closure(f0, max_iters=max_iters)
+    r_vtx2, r_lab2 = rf[:, :wv], rf[:, wv:]
+    rm = jnp.asarray(d_rev)
+    b0 = jnp.where(rm[:, None], base_r2, index.r_in) | base_r2
+    r_in2, _ = eng.closure(b0, reverse=True, max_iters=max_iters)
+    st.rounds = int(rounds)
+
+    # ---- exact changed-row scope for the plane patch --------------------
+    changed = np.asarray(jnp.any(rf != old_f, axis=1))
+    st.changed_rows = int(changed.sum())
+    rev2 = g2.reverse()
+
+    def with_preds(mask):
+        ids = np.flatnonzero(mask)
+        out = mask.copy()
+        if ids.size:
+            out[rev2.indices[csr_row_edges(rev2.indptr, ids)]] = True
+        return out
+
+    ball = s_mask
+    for _ in range(1, cfg.k):
+        ball = with_preds(ball)
+    p_mask = s_mask | ball | with_preds(changed)
+    st.patch_rows = int(p_mask.sum())
+
+    if st.patch_rows > min(rebuild_threshold, 1.0) * v_n:
+        # patch scope too wide: reuse the warm closures, full tail
+        st.tail = "full"
+        lab_w_all = jnp.asarray(
+            _edge_label_words(cfg, index.lab_slot, g2.labels))
+        idx2 = _assemble_planes(
+            g2, cfg, eng, vtx_w=vtx_w, lab_w=lab_w_all, base_v=base_v2,
+            base_l=base_l2, base_r=base_r2, r_vtx=r_vtx2, r_lab=r_lab2,
+            r_in=r_in2, g_count=g_count, way=way, push=push, pop=pop,
+            disc=index.disc, vtx_words_np=index.vtx_words,
+            lab_slot=index.lab_slot, rounds=int(rounds))
+        idx2._engines[eng.backend] = eng
+        st.wall_s = time.perf_counter() - t0
+        return idx2
+
+    # ---- row-granular plane patch ---------------------------------------
+    st.tail = "patch"
+    rows = np.flatnonzero(p_mask)
+    eidx_p = np.flatnonzero(p_mask[src2])
+    sp, dp, lp = src2[eidx_p], g2.indices[eidx_p], g2.labels[eidx_p]
+    (spos, dp_p, labw_p, way_p), valid_p = _pad_edges(
+        [np.searchsorted(rows, sp).astype(np.int32), dp.astype(np.int32),
+         _edge_label_words(cfg, index.lab_slot, lp),
+         way[eidx_p].astype(np.int32)], sp.shape[0])
+    rows_p = _pad_patch(rows, v_n)
+    leaf2 = g2.out_degree() == 0
+    leaf_rows = np.zeros(rows_p.shape[0], dtype=bool)
+    leaf_rows[:rows.shape[0]] = leaf2[rows]
+    g_rows = np.zeros(rows_p.shape[0], dtype=np.int32)
+    g_rows[:rows.shape[0]] = g_count[rows]
+    (d_vtx2, d_lab2, h_vtx2, h_lab2, v_vtx2, v_lab2, n_out2,
+     n_in2) = _patch_tail(
+        index.d_vtx, index.d_lab, index.h_vtx, index.h_lab, index.v_vtx,
+        index.v_lab, base_v2, base_l2, r_vtx2, r_lab2, r_in2, vtx_w,
+        jnp.asarray(_null_words(cfg)), jnp.asarray(leaf2),
+        jnp.asarray(rows_p), jnp.asarray(leaf_rows), jnp.asarray(g_rows),
+        jnp.asarray(spos), jnp.asarray(dp_p), jnp.asarray(labw_p),
+        jnp.asarray(way_p), jnp.asarray(valid_p),
+        k=cfg.k, gmax=cfg.g_max, chunk_words=cw)
+    idx2 = TDRIndex(
+        cfg=cfg, graph=g2, h_vtx=h_vtx2, h_lab=h_lab2, v_vtx=v_vtx2,
+        v_lab=v_lab2, n_out=n_out2, n_in=n_in2, push=jnp.asarray(push),
+        pop=jnp.asarray(pop), g_count=jnp.asarray(g_count),
+        vtx_words=index.vtx_words, lab_slot=index.lab_slot,
+        fixpoint_rounds=int(rounds), disc=index.disc,
+        base_v=base_v2, base_l=base_l2, base_r=base_r2,
+        r_vtx=r_vtx2, r_lab=r_lab2, r_in=r_in2,
+        d_vtx=d_vtx2, d_lab=d_lab2)
+    idx2._engines[eng.backend] = eng
+    st.wall_s = time.perf_counter() - t0
+    return idx2

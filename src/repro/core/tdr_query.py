@@ -1258,4 +1258,5 @@ def answer_plan(index: TDRIndex, plan: QueryPlan,
 
 
 def answer(index: TDRIndex, u: int, v: int, p: pat.Pattern, **kw) -> bool:
+    """Single-query convenience wrapper over ``answer_batch``."""
     return bool(answer_batch(index, [(u, v, p)], **kw)[0])

@@ -33,6 +33,16 @@ flight.  The design goal is **zero jit recompiles at steady state**:
   (``max_queue``): blocking submits wait for room (closed-loop clients),
   non-blocking submits raise ``QueueFull`` so open-loop front-ends can
   shed load instead of growing an unbounded backlog.
+* **Live graph updates.**  ``submit_update`` applies edge
+  insertions/deletions through ``tdr_build.update_index`` while serving
+  continues on the old (immutable) index, then enqueues a FIFO barrier:
+  the scheduler finishes every batch submitted before the update, swaps
+  the index, and drops the ``(u, v, pattern)`` result cache (the
+  per-index plan-row LRU is invalidated with it — the new index starts
+  with an empty ``pattern_rows`` cache).  Queries submitted after
+  ``submit_update`` returns are therefore always answered — and cached —
+  against the post-update graph; queries submitted before it see the
+  pre-update graph.  No batch ever straddles the swap.
 
 ``repro.core.engine.jit_cache_entries`` counts compiled variants across
 the whole hot path; the serving benchmark asserts its delta over the
@@ -75,6 +85,9 @@ class ServeConfig:
     max_m: int = 4
     pin_labels: bool = True      # pin the label-class set at warmup
     exact_chunk: int = 32
+    # dirty-set fraction beyond which submit_update falls back to a full
+    # (layout-pinned) rebuild — see tdr_build.update_index
+    update_rebuild_threshold: float = 0.5
 
 
 @dataclasses.dataclass
@@ -87,6 +100,7 @@ class ServeStats:
     dedup_hits: int = 0          # collapsed onto an in-batch duplicate
     rejected: int = 0            # non-blocking submits shed by admission
     unpinned_batches: int = 0    # batches whose m exceeded the warmup pin
+    updates: int = 0             # graph updates applied (submit_update)
     # batches padded past the warmed bucket grid (a single request with
     # more DNF terms than max_jobs is still served, alone, but may
     # compile a fresh bucket — visible here, not silently)
@@ -110,6 +124,18 @@ class _Request:
         self.terms = terms
         self.t_submit = time.perf_counter()
         self.future: Future = Future()
+
+
+class _UpdateBarrier:
+    """Queue sentinel carrying a pre-built index: the scheduler serves
+    everything queued ahead of it on the old index, then swaps and clears
+    the result cache — the quiesce point of ``submit_update``."""
+    __slots__ = ("index", "event", "exc")
+
+    def __init__(self, index):
+        self.index = index
+        self.event = threading.Event()
+        self.exc: BaseException | None = None
 
 
 def _resolve(fut: Future, value=None, exc: BaseException | None = None):
@@ -158,6 +184,7 @@ class QueryServer:
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
         self._results: collections.OrderedDict = collections.OrderedDict()
+        self._update_lock = threading.Lock()   # serializes submit_update
         self._running = False
         self._stopped = False
         self._drain = True
@@ -196,7 +223,13 @@ class QueryServer:
             leftovers = list(self._queue)
             self._queue.clear()
         for req in leftovers:
-            req.future.cancel()
+            if isinstance(req, _UpdateBarrier):
+                # the update's waiter must not hang on a dead scheduler
+                req.exc = RuntimeError(
+                    "QueryServer stopped before the update was applied")
+                req.event.set()
+            else:
+                req.future.cancel()
 
     def __enter__(self) -> "QueryServer":
         return self.start()
@@ -252,6 +285,83 @@ class QueryServer:
             self._queue.append(req)
             self._not_empty.notify()
         return req.future
+
+    # -------------------------------------------------------------- updates
+    def submit_update(self, edges_added=(), edges_removed=(), *,
+                      rebuild_threshold: float | None = None,
+                      timeout: float | None = None
+                      ) -> "tdr_build.UpdateStats":
+        """Apply a live graph update; blocks until the server serves from
+        the updated index.  Returns the ``tdr_build.UpdateStats`` of the
+        maintenance call (mode, dirty/patched rows, warm rounds).
+
+        The new index is built *outside* the scheduler (serving continues
+        on the old, immutable index), then a FIFO barrier quiesces the
+        scheduler: every request submitted before this call is answered
+        on the pre-update graph, the index swaps, and the ``(u, v, key)``
+        result cache is dropped along with the per-index plan-row LRU
+        (the swapped-in index starts with an empty ``pattern_rows``
+        cache).  Requests submitted after this method returns are always
+        answered against the post-update graph.  Concurrent updates are
+        serialized.  On a stopped server with an empty queue the swap
+        applies inline; with requests already queued it raises instead —
+        those requests are owed pre-update answers and there is no
+        scheduler to quiesce.  On timeout the barrier is withdrawn (the
+        update provably did not and will not apply) unless the scheduler
+        already holds it, in which case the imminent swap is waited
+        out."""
+        st = tdr_build.UpdateStats()
+        with self._update_lock:
+            # self.index is stable here: it only changes at *our* barrier
+            delta = self.index.graph.apply_updates(edges_added,
+                                                   edges_removed)
+            new_idx = tdr_build.update_index(
+                self.index, delta, backend=self.config.backend,
+                rebuild_threshold=(
+                    self.config.update_rebuild_threshold
+                    if rebuild_threshold is None else rebuild_threshold),
+                stats=st)
+            bar = _UpdateBarrier(new_idx)
+            with self._lock:
+                if self._thread is None:
+                    if self._queue:
+                        # requests queued before the first start() must
+                        # see the pre-update graph (the documented
+                        # ordering), and with no scheduler there is
+                        # nothing to quiesce them against
+                        raise RuntimeError(
+                            "submit_update on a stopped QueryServer with "
+                            "queued requests; start() it first")
+                    # idle stopped server: swap inline
+                    self.index = new_idx
+                    self._results.clear()
+                    self.stats.updates += 1
+                    return st
+                self._queue.append(bar)
+                self._not_empty.notify()
+            if not bar.event.wait(timeout):
+                # withdraw the barrier if it is still queued — leaving it
+                # behind would let a *later* update (built from the
+                # un-swapped index) overwrite this one's edges when both
+                # barriers eventually process
+                with self._lock:
+                    try:
+                        self._queue.remove(bar)
+                        withdrawn = True
+                    except ValueError:
+                        withdrawn = False   # already popped by scheduler
+                if withdrawn:
+                    raise TimeoutError(
+                        f"update barrier not reached within {timeout}s; "
+                        "update withdrawn")
+                # the scheduler holds it: the swap is imminent — wait it
+                # out so the update's effects are never in doubt
+                bar.event.wait()
+            if bar.exc is not None:
+                raise bar.exc
+            with self._lock:
+                self.stats.updates += 1
+        return st
 
     # --------------------------------------------------------------- warmup
     def warmup(self, sample: Sequence[tuple[int, int, pat.Pattern]],
@@ -313,6 +423,14 @@ class QueryServer:
             batch = self._next_batch()
             if batch is None:
                 return
+            if isinstance(batch, _UpdateBarrier):
+                # quiesce point: every pre-update batch has been served
+                # by this thread already — swap and invalidate
+                with self._lock:
+                    self.index = batch.index
+                    self._results.clear()
+                batch.event.set()
+                continue
             if batch:
                 try:
                     self._serve_batch(batch)
@@ -322,13 +440,15 @@ class QueryServer:
                     for req in batch:
                         _resolve(req.future, exc=exc)
 
-    def _next_batch(self) -> list[_Request] | None:
+    def _next_batch(self) -> "list[_Request] | _UpdateBarrier | None":
         """Block for the next coalesced batch (None = shut down).
 
         Drains until the job budget is met or ``max_wait_ms`` has passed
         since the first request of the batch — the continuous-batching
         tradeoff between latency (short wait) and amortization (full
-        buckets)."""
+        buckets).  An ``_UpdateBarrier`` at the queue head is returned
+        alone (once everything ahead of it has been batched), so no
+        batch ever straddles an index swap."""
         cfg = self.config
         with self._lock:
             while not self._queue:
@@ -343,6 +463,13 @@ class QueryServer:
             while True:
                 while self._queue:
                     nxt = self._queue[0]
+                    if isinstance(nxt, _UpdateBarrier):
+                        if batch:   # serve what precedes the barrier first
+                            self._not_full.notify_all()
+                            return batch
+                        self._queue.popleft()
+                        self._not_full.notify_all()
+                        return nxt
                     if batch and jobs + nxt.terms > cfg.max_jobs:
                         self._not_full.notify_all()
                         return batch

@@ -1,0 +1,282 @@
+"""Incremental TDR maintenance: bit-identity + serving-consistency tests.
+
+The contract under test: ``tdr_build.update_index`` over **any** random
+interleaving of edge insertions and deletions — including re-insertion
+of a removed edge, label changes (remove ``(u,v,l1)`` + add ``(u,v,l2)``),
+no-op adds/removes, and both the row-patch and full-tail incremental
+paths — must leave **every index plane** bit-identical to a from-scratch
+``build_index`` on the final graph pinned to the same hash layout
+(``layout=index.disc``).  On top of that, queries against an updated
+index must match the DFS oracle on the post-update graph, and a served
+query stream straddling a ``submit_update`` must never see a stale
+result: requests submitted before the update see the old graph, requests
+submitted after it see the new one.
+
+The interleaving counts (``N_INTERLEAVINGS``) are sized so CI runs 200+
+random interleavings across the two engine backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dfs_baseline, engine as engine_mod, graph as G
+from repro.core import pattern as pat, tdr_build, tdr_query
+from repro.launch import serve
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+
+# every array the index stores — the query-visible planes plus the
+# incremental-maintenance state the next update chains from
+PLANES = ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in", "push",
+          "pop", "g_count", "base_v", "base_l", "base_r", "r_vtx",
+          "r_lab", "r_in", "d_vtx", "d_lab")
+
+N_INTERLEAVINGS = {"segment": 150, "pallas": 60}
+N_V, N_L = 28, 4
+
+
+def assert_planes_equal(a, b, ctx=""):
+    for p in PLANES:
+        x, y = np.asarray(getattr(a, p)), np.asarray(getattr(b, p))
+        assert np.array_equal(x, y), \
+            f"{ctx}: plane {p} differs ({int((x != y).sum())} cells)"
+    assert np.array_equal(a.vtx_words, b.vtx_words), ctx
+    assert np.array_equal(np.asarray(a.disc), np.asarray(b.disc)), ctx
+
+
+def _edges_of(g):
+    return list(zip(g.src.tolist(), g.indices.tolist(), g.labels.tolist()))
+
+
+def _random_step(rng, g):
+    """One random update step: a mix of inserts, deletes, re-inserts,
+    label changes, and deliberate no-ops."""
+    add, rem = [], []
+    edges = _edges_of(g)
+    for _ in range(int(rng.integers(1, 4))):
+        kind = int(rng.integers(5))
+        if kind <= 1 or not edges:            # plain insert
+            u, v = int(rng.integers(N_V)), int(rng.integers(N_V))
+            if u != v:
+                add.append((u, v, int(rng.integers(N_L))))
+        elif kind == 2:                        # plain delete
+            rem.append(edges[int(rng.integers(len(edges)))])
+        elif kind == 3:                        # label change on one edge
+            u, v, l = edges[int(rng.integers(len(edges)))]
+            rem.append((u, v, l))
+            add.append((u, v, int((l + 1) % N_L)))
+        else:                                  # no-op add of existing edge
+            add.append(edges[int(rng.integers(len(edges)))])
+    if rng.integers(4) == 0 and rem:           # re-insertion
+        add.append(rem[0])
+    return add, rem
+
+
+def _mixed_queries(rng, g, n=8):
+    qs = []
+    for i in range(n):
+        u, v = int(rng.integers(g.n_vertices)), int(rng.integers(
+            g.n_vertices))
+        labs = rng.choice(g.n_labels, size=2, replace=False).tolist()
+        p = [pat.all_of(labs), pat.any_of(labs), pat.none_of(labs),
+             pat.parse(f"l{labs[0]} & !l{labs[1]}")][i % 4]
+        qs.append((u, v, p))
+    return qs
+
+
+@pytest.mark.parametrize("backend", ["segment", "pallas"])
+def test_update_interleavings_bit_identical(backend):
+    """update_index over random insert/delete interleavings ==
+    build_index(final graph, layout=frozen) on every plane, and query
+    answers match the DFS oracle on the final graph."""
+    n = N_INTERLEAVINGS[backend]
+    for trial in range(n):
+        rng = np.random.default_rng(1000 + trial)
+        g = G.random_graph(["er", "pa"][trial % 2], N_V, 2.0, N_L,
+                           seed=trial)
+        idx0 = tdr_build.build_index(g, CFG, backend=backend)
+        cur, curg = idx0, g
+        steps = int(rng.integers(1, 4))
+        for _ in range(steps):
+            add, rem = _random_step(rng, curg)
+            delta = curg.apply_updates(add, rem)
+            # threshold 2.0 forces the incremental path (the default-
+            # threshold rebuild fallback has its own test below)
+            cur = tdr_build.update_index(cur, delta, backend=backend,
+                                         rebuild_threshold=2.0)
+            curg = delta.graph
+        ref = tdr_build.build_index(curg, CFG, layout=idx0.disc,
+                                    backend=backend)
+        assert_planes_equal(cur, ref, f"{backend} trial={trial}")
+        if trial % 10 == 0:
+            qs = _mixed_queries(rng, curg)
+            got = tdr_query.answer_batch(cur, qs, backend=backend)
+            want = [dfs_baseline.answer_pcr(curg, u, v, p)
+                    for u, v, p in qs]
+            assert got.tolist() == want, f"{backend} trial={trial}"
+
+
+@pytest.mark.parametrize("backend", ["segment", "pallas"])
+def test_update_threshold_paths_agree(backend):
+    """Row-patch, full-tail, and rebuild fallback all produce the same
+    bits; UpdateStats reports which path ran."""
+    rng = np.random.default_rng(5)
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=5)
+    idx = tdr_build.build_index(g, CFG, backend=backend)
+    add, rem = _random_step(rng, g)
+    delta = g.apply_updates(add, rem)
+    if delta.n_changes == 0:
+        pytest.skip("degenerate step")
+    outs = {}
+    for name, thresh in [("patch", 2.0), ("rebuild", 0.0)]:
+        st = tdr_build.UpdateStats()
+        outs[name] = tdr_build.update_index(idx, delta, backend=backend,
+                                            rebuild_threshold=thresh,
+                                            stats=st)
+        assert st.mode == ("rebuild" if name == "rebuild"
+                           else "incremental"), st
+    ref = tdr_build.build_index(delta.graph, CFG, layout=idx.disc,
+                                backend=backend)
+    assert_planes_equal(outs["patch"], ref, "patch")
+    assert_planes_equal(outs["rebuild"], ref, "rebuild")
+
+
+def test_update_noop_and_validation():
+    g = G.fig2_example()
+    idx = tdr_build.build_index(g, CFG)
+    st = tdr_build.UpdateStats()
+    # adding an existing edge / removing a missing one is a no-op and
+    # returns the index object unchanged
+    same = tdr_build.update_index(idx, edges_added=[(0, 1, 0)],
+                                  edges_removed=[(9, 0, 0)], stats=st)
+    assert same is idx and st.mode == "noop"
+    with pytest.raises(ValueError):
+        g.apply_updates([(0, 99, 0)])
+    with pytest.raises(ValueError):
+        g.apply_updates([(0, 1, 99)])
+    with pytest.raises(TypeError):
+        tdr_build.update_index(idx, delta=[(0, 1, 0)])
+    # a foreign-universe delta is rejected
+    other = G.erdos_renyi(5, 1.0, 2, seed=0)
+    with pytest.raises(ValueError):
+        tdr_build.update_index(idx, other.apply_updates([(0, 1, 0)]))
+
+
+def test_apply_updates_set_semantics():
+    g = G.fig2_example()
+    # remove + re-add the same edge in one batch -> net no-op
+    d = g.apply_updates([(0, 1, 0)], [(0, 1, 0)])
+    assert d.n_changes == 0 and d.graph.n_edges == g.n_edges
+    # effective delta filters no-ops; duplicates collapse
+    d = g.apply_updates([(2, 7, 3), (2, 7, 3), (0, 1, 0)], [(5, 9, 2)])
+    assert d.added.tolist() == [[2, 7, 3]]
+    assert d.removed.tolist() == [[5, 9, 2]]
+    # parallel labels are distinct edges: removing one keeps the other
+    d2 = g.apply_updates([], [(0, 2, 0)])
+    assert (0, 2, 1) in _edges_of(d2.graph)
+    assert (0, 2, 0) not in _edges_of(d2.graph)
+
+
+def test_layout_pin_matches_chain_from_empty_regions():
+    """Chained updates through structurally drastic states (vertex loses
+    all out-edges, then regains) stay bit-identical."""
+    g = G.fig2_example()
+    idx0 = tdr_build.build_index(g, CFG)
+    out0 = [(0, v, l) for v, l in zip(*g.out_edges(0))]
+    d1 = g.apply_updates([], out0)            # strip all of v0's edges
+    i1 = tdr_build.update_index(idx0, d1, rebuild_threshold=2.0)
+    d2 = d1.graph.apply_updates(out0, [])     # regain them
+    i2 = tdr_build.update_index(i1, d2, rebuild_threshold=2.0)
+    ref1 = tdr_build.build_index(d1.graph, CFG, layout=idx0.disc)
+    ref2 = tdr_build.build_index(d2.graph, CFG, layout=idx0.disc)
+    assert_planes_equal(i1, ref1, "stripped")
+    assert_planes_equal(i2, ref2, "regained")
+
+
+@pytest.mark.parametrize("reverse", [False, True])
+def test_engine_apply_delta_patches_adjacency(reverse):
+    """Engine.apply_delta's row-patched dense adjacency == repacking the
+    new graph from scratch."""
+    rng = np.random.default_rng(11)
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=11)
+    eng = engine_mod.make_engine(g, backend="pallas")
+    _ = eng.adjacency(reverse=reverse)        # populate the cache
+    add, rem = _random_step(rng, g)
+    delta = g.apply_updates(add, rem)
+    eng2 = eng.apply_delta(delta.graph, delta.added, delta.removed)
+    got = np.asarray(eng2.adjacency(reverse=reverse))
+    want = engine_mod.pack_adjacency_np(delta.graph, reverse=reverse)
+    assert np.array_equal(got, want)
+
+
+def test_served_stream_straddling_update_never_stale():
+    """Requests submitted before submit_update see the old graph;
+    requests submitted after it see the new one — checked against the
+    DFS oracle on each graph, with the result cache enabled so stale
+    cache hits would be caught."""
+    g0 = G.random_graph("er", 48, 1.8, N_L, seed=21)
+    idx = tdr_build.build_index(g0, CFG)
+    rng = np.random.default_rng(22)
+    pool = _mixed_queries(rng, g0, n=24)
+    add = [(int(rng.integers(48)), int(rng.integers(48)),
+            int(rng.integers(N_L))) for _ in range(4)]
+    add = [(u, v, l) for (u, v, l) in add if u != v]
+    rem = _edges_of(g0)[:2]
+    g1 = g0.apply_updates(add, rem).graph
+
+    with serve.QueryServer(idx, result_cache=64, max_wait_ms=0.5) as srv:
+        pre = [srv.submit(u, v, p) for (u, v, p) in pool]
+        st = srv.submit_update(add, rem, timeout=60)
+        assert st.mode in ("incremental", "rebuild")
+        post = [srv.submit(u, v, p) for (u, v, p) in pool]
+        pre_ans = [f.result(timeout=60) for f in pre]
+        post_ans = [f.result(timeout=60) for f in post]
+        # repeats after the update must also re-resolve freshly (cache
+        # was invalidated at the barrier, then repopulated post-update)
+        again = [srv.submit(u, v, p).result(timeout=60)
+                 for (u, v, p) in pool]
+        assert srv.stats.updates == 1
+    assert pre_ans == [dfs_baseline.answer_pcr(g0, u, v, p)
+                       for (u, v, p) in pool]
+    want1 = [dfs_baseline.answer_pcr(g1, u, v, p) for (u, v, p) in pool]
+    assert post_ans == want1
+    assert again == want1
+
+
+def test_update_on_unstarted_server_with_queued_requests_raises():
+    """Requests queued before the first start() are owed pre-update
+    answers; with no scheduler to quiesce, submit_update must refuse
+    rather than swap under them.  An idle stopped server swaps inline."""
+    g = G.fig2_example()
+    idx = tdr_build.build_index(g, CFG)
+    srv = serve.QueryServer(idx)
+    fut = srv.submit(0, 5, pat.all_of([1, 3]))   # queues unserved
+    with pytest.raises(RuntimeError):
+        srv.submit_update([(4, 0, 3)], [])
+    assert srv.index is idx and not fut.done()
+    # drain the queued request, then the inline-swap path works
+    srv.start()
+    assert fut.result(timeout=60) is True
+    srv.stop()
+    srv.submit_update([(4, 0, 3)], [])
+    assert srv.index.graph.n_edges == g.n_edges + 1
+
+
+def test_sequential_updates_through_server():
+    """Several submit_update calls in a row keep serving correct (each
+    chains off the previous swapped index)."""
+    g = G.random_graph("er", 40, 1.5, N_L, seed=31)
+    idx = tdr_build.build_index(g, CFG)
+    rng = np.random.default_rng(32)
+    with serve.QueryServer(idx, result_cache=32) as srv:
+        curg = g
+        for step in range(3):
+            add, rem = _random_step(rng, curg)
+            curg = curg.apply_updates(add, rem).graph
+            srv.submit_update(add, rem, timeout=60)
+            qs = _mixed_queries(rng, curg, n=8)
+            got = [srv.submit(u, v, p).result(timeout=60)
+                   for (u, v, p) in qs]
+            want = [dfs_baseline.answer_pcr(curg, u, v, p)
+                    for (u, v, p) in qs]
+            assert got == want, f"step {step}"
+        assert srv.stats.updates == 3

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker for the docs CI job.
+
+Scans the given markdown files for ``[text](target)`` links and fails on:
+
+* relative-path targets that do not exist in the repo,
+* ``#anchor`` fragments that match no heading in the target file
+  (GitHub's slug rules: lowercase, punctuation stripped, spaces to
+  hyphens),
+* bare intra-repo file mentions in backticks that name a path under
+  ``src/``/``tests/``/``benchmarks/``/``examples/`` which no longer
+  exists (doc rot on renames).
+
+External http(s)/mailto links are ignored — CI must not depend on the
+network.
+
+  python tools/check_links.py README.md ARCHITECTURE.md ROADMAP.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH = re.compile(
+    r"`((?:src|tests|benchmarks|examples|tools)/[A-Za-z0-9_./-]+"
+    r"\.(?:py|md|json|yml))`")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)      # drop punctuation (keep - and _)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    return {slug(h) for h in HEADING.findall(path.read_text())}
+
+
+def check(files: list) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    errors = []
+    for name in files:
+        path = (root / name).resolve()
+        text = path.read_text()
+        for target in LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref, _, frag = target.partition("#")
+            tgt = path if not ref else (path.parent / ref).resolve()
+            if ref and not tgt.exists():
+                errors.append(f"{name}: dead link -> {target}")
+                continue
+            if frag and tgt.suffix == ".md" and frag not in anchors_of(tgt):
+                errors.append(f"{name}: dead anchor -> {target}")
+        for ref in CODE_PATH.findall(text):
+            if not (root / ref).exists():
+                errors.append(f"{name}: stale file mention -> `{ref}`")
+    for e in errors:
+        print(f"ERROR {e}", file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAILED' if errors else 'ok'} ({len(errors)} errors)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1:] or
+                   ["README.md", "ARCHITECTURE.md", "ROADMAP.md"]))

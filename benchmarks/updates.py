@@ -147,7 +147,9 @@ def run(scale: str = "smoke", seed: int = 0,
         {"mean_rounds": round(float(np.mean([s.rounds for s in stats])),
                               1),
          "mean_patch_rows": round(float(np.mean(
-             [s.patch_rows for s in stats])), 1)}))
+             [s.patch_rows for s in stats])), 1),
+         # interpret-mode pallas: dispatch-dominated, report-only
+         **({"gated": False} if interpret else {})}))
 
     # ---- delete chain (default threshold; rebuild fallback is normal) ---
     dels = _delete_chain(g_fin, rng, N_UPDATES)

@@ -3,15 +3,13 @@ from . import base
 from .base import ModelConfig, InputShape, SHAPES
 
 from . import (dbrx_132b, deepseek_v2_236b, gemma3_27b, musicgen_large,
-               phi3_medium_14b, phi3_mini_3p8b, phi3_vision_4p2b, rwkv6_3b,
-               stablelm_12b, zamba2_1p2b, tdr_graph)
+               phi3_mini_3p8b, phi3_vision_4p2b, rwkv6_3b,
+               zamba2_1p2b, tdr_graph)
 
 REGISTRY = {
     "phi-3-vision-4.2b": phi3_vision_4p2b.CONFIG,
     "gemma3-27b": gemma3_27b.CONFIG,
-    "phi3-medium-14b": phi3_medium_14b.CONFIG,
     "phi3-mini-3.8b": phi3_mini_3p8b.CONFIG,
-    "stablelm-12b": stablelm_12b.CONFIG,
     "zamba2-1.2b": zamba2_1p2b.CONFIG,
     "dbrx-132b": dbrx_132b.CONFIG,
     "deepseek-v2-236b": deepseek_v2_236b.CONFIG,

@@ -121,7 +121,8 @@ def _put(mesh: Mesh, spec: P, *arrays):
 # ------------------------------------------------------------ closure only
 def distributed_closure(graph: Graph, seed_words: np.ndarray, mesh: Mesh,
                         *, max_iters: int | None = None,
-                        chunk_words: int = 2) -> jax.Array:
+                        chunk_words: int = 2,
+                        row_budget: int | None = None) -> jax.Array:
     """Reachability-closure fixpoint, vertex-sharded over ``mesh``.
 
     ``seed_words`` is the packed uint32 ``[V, W]`` per-vertex hash
@@ -135,6 +136,14 @@ def distributed_closure(graph: Graph, seed_words: np.ndarray, mesh: Mesh,
     Convergence comes from the all-reduced changed flag — no caller-
     guessed round count — and the per-round exchange payload is the
     packed word table, never a bool plane.
+
+    ``row_budget`` switches the exchange to the delta-row scheme
+    (``engine.closure_sharded_delta``): per round each device ships at
+    most that many *changed* rows as sentinel-padded ``(id, payload)``
+    pairs — the row-granular analogue of the two-level compressed
+    planes — instead of all-gathering its full word block.  The result
+    is bit-identical for any budget ≥ 1 (the OR fixpoint has a unique
+    least solution; an overflowing budget only adds rounds).
     """
     seed_words = np.asarray(seed_words)
     if seed_words.dtype != np.uint32:
@@ -167,7 +176,17 @@ def distributed_closure(graph: Graph, seed_words: np.ndarray, mesh: Mesh,
                 chunk_words=chunk_words)
 
         base = step(rows_l)  # successor seeds: self excluded, as in build
-        r, _ = engine_mod.closure_sharded(base, step, axes, max_iters=iters)
+        if row_budget is not None:
+            # a binding budget trades rounds for traffic: scale the
+            # dense-round bound by the worst-case per-device backlog
+            backlog = -(-per // max(1, min(row_budget, per)))
+            r, _ = engine_mod.closure_sharded_delta(
+                base, rem, loc, okw, axes, per=per, v_pad=v_pad,
+                chunk_words=chunk_words, row_budget=row_budget,
+                max_iters=iters * backlog)
+        else:
+            r, _ = engine_mod.closure_sharded(base, step, axes,
+                                              max_iters=iters)
         return r[None]
 
     out = run(_put(mesh, spec, rows),
@@ -359,12 +378,12 @@ def filter_cascade_sharded(index: "build_mod.TDRIndex",
     # pallas_call the cascade's fused way filter lowers to
     @functools.partial(
         shard_map, mesh=mesh, check_rep=False,
-        in_specs=(spec_j,) * 4 + (P(),) * 10, out_specs=spec_j)
+        in_specs=(spec_j,) * 4 + (P(),) * 12, out_specs=spec_j)
     def run(u, v, req_w, forb_w, null_w, vtx_packed, h_vtx, h_lab, v_vtx,
-            v_lab, n_out, n_in, push, pop):
+            v_lab, n_out, n_in, sat_out, sat_in, push, pop):
         return query_mod._filter_cascade(
             u, v, req_w, forb_w, null_w, vtx_packed, h_vtx, h_lab, v_vtx,
-            v_lab, n_out, n_in, push, pop, k=k, mode=mode)
+            v_lab, n_out, n_in, sat_out, sat_in, push, pop, k=k, mode=mode)
 
     job_args = _put(mesh, spec_j, plan.u.astype(np.int32),
                     plan.v.astype(np.int32), plan.req_w, plan.forb_w)
@@ -373,10 +392,11 @@ def filter_cascade_sharded(index: "build_mod.TDRIndex",
            tuple(int(d.id) for d in mesh.devices.flat))
     bcast = index._replicated.get(key)
     if bcast is None:
+        sat_out_d, sat_in_d = index.summary_flags_dev()
         bcast = _put(mesh, P(), query_mod._null_words_dev(index.cfg),
                      index.vtx_packed, index.h_vtx, index.h_lab,
                      index.v_vtx, index.v_lab, index.n_out, index.n_in,
-                     index.push, index.pop)
+                     sat_out_d, sat_in_d, index.push, index.pop)
         index._replicated[key] = bcast
     return np.asarray(run(*job_args, *bcast))
 

@@ -43,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitset
-from .graph import Graph, csr_row_edges
+from .compressed import BlockCompressed, compress_blocks, patch_blocks
+from .graph import Graph, csr_row_edges, pad_bucket
 
 ENV_BACKEND = "REPRO_ENGINE_BACKEND"
 BACKENDS = ("segment", "pallas")
@@ -74,6 +75,10 @@ class EngineConfig:
     bit_chunk: int = 64          # transient chunk width (bits) for segment ORs
     interpret: bool | None = None  # pallas interpret; None -> off-TPU only
     max_dense_bytes: int = 1 << 28  # pallas dense-adjacency cap (auto-fallback)
+    sparse: bool = True          # block-sparse closure fixpoints (both backends)
+    block_rows: int = 8          # row-block height of the block-sparse operand
+    block_words: int = 1         # word-block width  (8x1 = 8x32-bit blocks)
+    sparse_dense_frac: float = 0.5  # segment: frontier fraction -> dense round
 
     @property
     def chunk_words(self) -> int:
@@ -185,6 +190,84 @@ def _closure_matmul(base: jax.Array, adj: jax.Array, *, max_iters: int,
     return r, rounds
 
 
+@functools.partial(jax.jit, static_argnames=("mode", "max_iters"))
+def _closure_blocksparse(base: jax.Array, comp: BlockCompressed, *,
+                         mode: str, max_iters: int):
+    """Delta-form fixpoint over the block-compressed adjacency.
+
+    Each round expands only the *newly set* rows (``new``): since the lfp
+    is unique and OR distributes, ``R ∨ A⊗new`` reaches the same fixpoint
+    as ``R ∨ A⊗R`` — and a shrinking frontier means the per-round k-block
+    any-bit summary goes dark block by block, which is exactly what the
+    kernel's ZERO/dead-block skip turns into saved work."""
+    from repro.kernels import ops  # deferred: kernels import repro.core
+
+    def expand(x):  # x row-padding to the block grid happens in the kernel
+        return ops.frontier_step_sparse(comp, x, mode=mode)
+
+    def cond(state):
+        _, _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, new, _, it = state
+        nxt = expand(new) & ~r
+        return r | nxt, nxt, jnp.any(nxt != 0), it + 1
+
+    r, _, _, rounds = jax.lax.while_loop(
+        cond, body, (base, base, jnp.bool_(True), jnp.int32(0)))
+    return r, rounds
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "chunk_words",
+                                             "max_iters", "max_active"))
+def _closure_segment_until_sparse(base: jax.Array, gather_idx: jax.Array,
+                                  scatter_idx: jax.Array, *,
+                                  num_segments: int, chunk_words: int,
+                                  max_iters: int, max_active: int):
+    """Dense segment rounds in ONE jitted while_loop, exiting early once
+    the frontier (rows with fresh bits) shrinks to ``max_active`` rows.
+
+    The host frontier loop pays a device→host sync every round to learn
+    the active set; while the frontier covers most of the graph those
+    syncs cost more than the edge work they could save, so this stage
+    burns through the high-occupancy rounds sync-free and hands the
+    small-frontier tail (``(r, new, rounds)``) to the compacted gathers.
+    """
+
+    def cond(state):
+        _, _, n_act, it = state
+        return jnp.logical_and(n_act > max_active, it < max_iters)
+
+    def body(state):
+        r, _, _, it = state
+        upd = bitset.segment_or_words(r[gather_idx], scatter_idx,
+                                      num_segments=num_segments,
+                                      chunk_words=chunk_words)
+        new = upd & ~r
+        n_act = jnp.sum(jnp.any(new != 0, axis=-1).astype(jnp.int32))
+        return r | new, new, n_act, it + 1
+
+    r, new, _, rounds = jax.lax.while_loop(
+        cond, body,
+        (base, base, jnp.int32(num_segments + 1), jnp.int32(0)))
+    return r, new, rounds
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "chunk_words"))
+def _sparse_segment_round(x: jax.Array, gather_idx: jax.Array,
+                          scatter_idx: jax.Array, *, num_segments: int,
+                          chunk_words: int) -> jax.Array:
+    """One frontier-compacted semiring round: gather/scatter over the
+    *active* edge subset only.  Padding slots gather a zero row (index
+    ``V`` of the extended table) and scatter to the dropped out-of-range
+    segment, so bucket-padded edge counts keep jit signatures stable."""
+    x_ext = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+    return bitset.segment_or_words(x_ext[gather_idx], scatter_idx,
+                                   num_segments=num_segments,
+                                   chunk_words=chunk_words)
+
+
 # ------------------------------------------------- mesh-aware entry points
 # These run *inside* ``shard_map`` blocks (repro.core.distributed): the
 # vertex dimension is 1-D partitioned over the flattened mesh axes, each
@@ -248,6 +331,74 @@ def closure_sharded(base: jax.Array, step, axis_names, *, max_iters: int):
     return r, rounds
 
 
+def closure_sharded_delta(base: jax.Array, gather_idx: jax.Array,
+                          scatter_idx: jax.Array, valid_words: jax.Array,
+                          axis_names, *, per: int, v_pad: int,
+                          chunk_words: int, row_budget: int,
+                          max_iters: int):
+    """Delta-row exchange fixpoint: ship *changed rows*, not the table.
+
+    The row-granular analogue of the two-level compressed planes: each
+    device keeps a pending bitmap (level-1 summary — which of its rows
+    carry bits the mesh has not seen; an unchanged row is an ALL_ZERO
+    delta and never crosses the wire) and per round ships at most
+    ``row_budget`` pending rows as a sentinel-padded ``(global id,
+    packed payload)`` pair (the level-2 pool).  Receivers scatter the
+    shipped rows into a zeroed table and run the ordinary local packed
+    OR-reduction, so per-round exchange traffic is
+    ``budget × (W + 1)`` words instead of ``per × W``.
+
+    Rows left over when the budget binds stay pending and ship on later
+    rounds; a row whose content changes after shipping re-enters the
+    bitmap.  Every changed row therefore ships eventually, and because
+    the OR fixpoint is monotone with a unique least solution, the result
+    is **bit-identical** to ``closure_sharded`` over the dense exchange —
+    an overflowing budget costs extra rounds, never bits.  Convergence is
+    the all-reduced "any row still pending" flag.
+
+    Returns ``(r_local, rounds)`` like ``closure_sharded``.
+    """
+    axes = tuple(axis_names)
+    budget = min(row_budget, per)
+    w = base.shape[1]
+    lane = jnp.arange(per, dtype=jnp.int32)
+    flat = jnp.int32(0)
+    for ax in axes:  # outer-major, matching the P(axes) shard numbering
+        flat = flat * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    row0 = flat * per
+
+    def cond(state):
+        _, _, changed, it = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    def body(state):
+        r, pend, _, it = state
+        # first `budget` pending local rows (sentinel `per` pads the tail)
+        ship = jax.lax.sort(jnp.where(pend, lane, jnp.int32(per)))[:budget]
+        live = ship < per
+        r_ext = jnp.concatenate([r, jnp.zeros((1, w), r.dtype)])
+        payload = r_ext[ship]                       # sentinel -> zero row
+        gid = jnp.where(live, ship + row0, jnp.int32(v_pad))
+        gids = all_gather_words(gid, axes)          # [S*B]
+        pays = all_gather_words(payload, axes)      # [S*B, W]
+        # real global ids are distinct within a round (each row ships only
+        # from its owner); sentinel slots all write the zero row
+        tbl = jnp.zeros((v_pad + 1, w), r.dtype).at[gids].set(pays)[:v_pad]
+        upd = bitset.segment_or_words(
+            tbl[gather_idx] & valid_words, scatter_idx,
+            num_segments=per, chunk_words=chunk_words)
+        new = upd & ~r
+        shipped = jnp.zeros(per + 1, bool).at[ship].set(True)[:per]
+        pend = (pend & ~shipped) | jnp.any(new != 0, axis=1)
+        changed = jax.lax.psum(jnp.any(pend).astype(jnp.int32), axes) > 0
+        return r | new, pend, changed, it + 1
+
+    pend0 = jnp.any(base != 0, axis=1)
+    r, _, _, rounds = jax.lax.while_loop(
+        cond, body, (base, pend0, jnp.bool_(True), jnp.int32(0)))
+    return r, rounds
+
+
 # ------------------------------------------------------------------ engine
 class Engine:
     """OR-semiring propagation over one graph, packed words in/out.
@@ -275,7 +426,9 @@ class Engine:
         self.edge_src = jnp.asarray(graph.src)
         self.edge_dst = jnp.asarray(graph.indices)
         self._adj: dict[bool, jax.Array] = {}
+        self._bcomp: dict[bool, BlockCompressed] = {}
         self._label_adj: dict[tuple, jax.Array] = {}
+        self._rev_graph: Graph | None = None
 
     # ------------------------------------------------------------ operands
     @property
@@ -305,6 +458,20 @@ class Engine:
             self._adj[reverse] = jnp.asarray(
                 pack_adjacency_np(self.graph, reverse=reverse))
         return self._adj[reverse]
+
+    def block_adjacency(self, *, reverse: bool = False) -> BlockCompressed:
+        """Cached block-compressed adjacency (the sparse-closure operand).
+
+        ZERO blocks cost 2 bits, so for the sparse graphs the paper
+        targets this is E-proportional storage where the dense bit-matrix
+        is V²-proportional — it is what lifts the closure operand past
+        ``max_dense_bytes``-scale vertex counts."""
+        if reverse not in self._bcomp:
+            self._bcomp[reverse] = compress_blocks(
+                pack_adjacency_np(self.graph, reverse=reverse),
+                br=self.config.block_rows, bw=self.config.block_words,
+                nbits=self.graph.n_vertices)
+        return self._bcomp[reverse]
 
     def label_class_adjacency(self, special_labels, *,
                               reverse: bool = True) -> jax.Array:
@@ -343,7 +510,8 @@ class Engine:
         return self.segment_or(x[gather], scatter, self.graph.n_vertices)
 
     def closure(self, base: jax.Array, *, reverse: bool = False,
-                max_iters: int | None = None) -> tuple[jax.Array, int]:
+                max_iters: int | None = None,
+                sparse: bool | None = None) -> tuple[jax.Array, int]:
         """Least fixpoint ``R = base ∨ propagate(R)``; returns (R, rounds).
 
         ``base`` is packed uint32 ``[V, W]``.  The lfp is unique, so any
@@ -351,18 +519,98 @@ class Engine:
         bits — incremental maintenance (``tdr_build.update_index``) leans
         on this by re-entering the closure from the *previous* converged
         state plus a delta, which typically terminates in 1-2 rounds
-        instead of a diameter's worth."""
+        instead of a diameter's worth.
+
+        ``sparse`` routes the fixpoint through the block-sparse path: the
+        block-compressed adjacency and delta-frontier rounds on
+        ``pallas``, frontier-compacted edge gathers on ``segment``.  Both
+        are bit-identical to the dense fixpoint — sparsity only changes
+        which work is skipped.  The default (``None`` +
+        ``EngineConfig.sparse``) engages it only where skipping pays:
+        always on ``segment``, and on ``pallas`` only under the real TPU
+        lowering — in interpret mode the per-grid-step Python dispatch
+        dwarfs any skipped block, so the dense kernel is faster there
+        (pass ``sparse=True`` to force the block-sparse path anyway,
+        e.g. for equivalence tests)."""
         max_iters = max_iters or self.graph.n_vertices
+        if sparse is None:
+            sparse = self.config.sparse and (
+                self.backend == "segment" or not self.interpret)
         if self.backend == "pallas":
+            if sparse:
+                return _closure_blocksparse(
+                    base, self.block_adjacency(reverse=reverse),
+                    mode=self.matmul_mode, max_iters=max_iters)
             return _closure_matmul(base, self.adjacency(reverse=reverse),
                                    max_iters=max_iters,
                                    mode=self.matmul_mode)
+        if sparse:
+            return self._closure_segment_frontier(base, reverse=reverse,
+                                                  max_iters=max_iters)
         gather = self.edge_dst if not reverse else self.edge_src
         scatter = self.edge_src if not reverse else self.edge_dst
         return _closure_segment(base, gather, scatter,
                                 num_segments=self.graph.n_vertices,
                                 chunk_words=self.config.chunk_words,
                                 max_iters=max_iters)
+
+    def _gather_csr(self, reverse: bool) -> Graph:
+        """CSR grouped by each round's *gather* endpoint: forward
+        propagation gathers ``x[dst]``, so its edge subsets come from the
+        edge-reversed CSR (and vice versa)."""
+        if reverse:
+            return self.graph
+        if self._rev_graph is None:
+            self._rev_graph = self.graph.reverse()
+        return self._rev_graph
+
+    def _closure_segment_frontier(self, base: jax.Array, *, reverse: bool,
+                                  max_iters: int) -> tuple[jax.Array, int]:
+        """Host-driven delta fixpoint for the segment backend: each round
+        gathers only edges incident to the still-active frontier rows
+        (bucket-padded so the jit-shape count stays logarithmic), falling
+        back to a full dense round while the frontier covers more than
+        ``sparse_dense_frac`` of the vertices."""
+        v = self.graph.n_vertices
+        g = self._gather_csr(reverse)
+        thresh = int(self.config.sparse_dense_frac * v)
+        gather = self.edge_dst if not reverse else self.edge_src
+        scatter = self.edge_src if not reverse else self.edge_dst
+        # stage 1: high-occupancy rounds run dense inside one jitted loop
+        # (no per-round host sync); it exits when the frontier thins out
+        r, new, rounds_d = _closure_segment_until_sparse(
+            jnp.asarray(base), gather, scatter, num_segments=v,
+            chunk_words=self.config.chunk_words, max_iters=max_iters,
+            max_active=thresh)
+        rounds = int(rounds_d)
+        # stage 2: small-frontier tail — compacted edge gathers, one
+        # device→host sync per round to learn the active set
+        while rounds < max_iters:
+            act = np.flatnonzero(np.asarray(jnp.any(new != 0, axis=-1)))
+            if act.size == 0:
+                break
+            rounds += 1
+            if act.size > thresh:
+                # the frontier can re-widen (a hub lighting up its whole
+                # out-neighbourhood); fall back to a dense round
+                upd = self.propagate(new, reverse=reverse)
+            else:
+                counts = (g.indptr[act + 1] - g.indptr[act]).astype(np.int64)
+                gat = np.repeat(act.astype(np.int64), counts)
+                scat = g.indices[csr_row_edges(g.indptr, act)].astype(
+                    np.int64)
+                b = pad_bucket(max(gat.size, 1), lo=32)
+                gat_p = np.full(b, v, dtype=np.int64)
+                gat_p[:gat.size] = gat
+                scat_p = np.full(b, v, dtype=np.int64)  # dropped segment
+                scat_p[:scat.size] = scat
+                upd = _sparse_segment_round(
+                    new, jnp.asarray(gat_p), jnp.asarray(scat_p),
+                    num_segments=v, chunk_words=self.config.chunk_words)
+            nxt = upd & ~r
+            r = r | nxt
+            new = nxt
+        return r, rounds
 
     # ------------------------------------------------------------- updates
     def apply_delta(self, graph: Graph, added: np.ndarray,
@@ -386,26 +634,44 @@ class Engine:
         new.edge_src = jnp.asarray(graph.src)
         new.edge_dst = jnp.asarray(graph.indices)
         new._adj = {}
+        new._bcomp = {}
         new._label_adj = {}
+        new._rev_graph = None
         rev_csr = None
-        for reverse, adj in self._adj.items():
+
+        def touched_rows(reverse: bool) -> np.ndarray:
             col = 1 if reverse else 0
-            rows = np.unique(np.concatenate(
+            return np.unique(np.concatenate(
                 [added[:, col], removed[:, col]])).astype(np.int64)
-            if rows.size == 0:
-                new._adj[reverse] = adj
-                continue
+
+        def patched_row_bits(reverse: bool, rows: np.ndarray,
+                             kw: int) -> np.ndarray:
+            nonlocal rev_csr
             if reverse and rev_csr is None:
                 rev_csr = graph.reverse()
             g = rev_csr if reverse else graph
             counts = (g.indptr[rows + 1] - g.indptr[rows]).astype(np.int64)
             pos = np.repeat(np.arange(rows.shape[0]), counts)
             eidx = csr_row_edges(g.indptr, rows)
-            rowbits = np.zeros((rows.shape[0], adj.shape[1]),
-                               dtype=np.uint32)
+            rowbits = np.zeros((rows.shape[0], kw), dtype=np.uint32)
             bitset.set_bits_np(rowbits, (pos,), g.indices[eidx])
+            return rowbits
+
+        for reverse, adj in self._adj.items():
+            rows = touched_rows(reverse)
+            if rows.size == 0:
+                new._adj[reverse] = adj
+                continue
+            rowbits = patched_row_bits(reverse, rows, adj.shape[1])
             new._adj[reverse] = adj.at[jnp.asarray(rows)].set(
                 jnp.asarray(rowbits))
+        for reverse, comp in self._bcomp.items():
+            rows = touched_rows(reverse)
+            if rows.size == 0:
+                new._bcomp[reverse] = comp
+                continue
+            rowbits = patched_row_bits(reverse, rows, comp.shape[1])
+            new._bcomp[reverse] = patch_blocks(comp, rows, rowbits)
         return new
 
 
@@ -421,11 +687,11 @@ def jit_cache_entries() -> int:
     import sys
 
     from repro.core import bitset as bitset_mod, tdr_query
-    from repro.kernels import (bitset_matmul, ops, pattern_filter,
-                               popcount)
+    from repro.kernels import (bitset_matmul, block_sparse, ops,
+                               pattern_filter, popcount)
     total = 0
     for mod in (sys.modules[__name__], bitset_mod, tdr_query, ops,
-                bitset_matmul, pattern_filter, popcount):
+                bitset_matmul, block_sparse, pattern_filter, popcount):
         for obj in vars(mod).values():
             size = getattr(obj, "_cache_size", None)
             if callable(size):

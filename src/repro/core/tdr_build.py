@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitset
+from . import compressed as compressed_mod
 from . import engine as engine_mod
 from .graph import Graph, GraphDelta, csr_row_edges, pad_bucket
 
@@ -88,6 +89,11 @@ class TDRIndex:
     fixpoint_rounds: int = 0
     _vtx_packed: Any = dataclasses.field(default=None, repr=False)
     _engines: dict = dataclasses.field(default_factory=dict, repr=False)
+    # two-level compressed form of each plane (name -> CompressedPlanes),
+    # built lazily and row-patched across updates (never silently stale:
+    # every code path that rewrites a plane either patches or drops it)
+    _comp: dict = dataclasses.field(default_factory=dict, repr=False)
+    _sat_dev: Any = dataclasses.field(default=None, repr=False)
     # per-mesh replicated copies of the query-side planes (the distributed
     # cascade broadcasts them once per mesh, not once per batch)
     _replicated: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -143,6 +149,69 @@ class TDRIndex:
     def adj_packed(self, *, reverse: bool = False) -> jax.Array:
         """Packed adjacency bit-matrix for the engine (cached)."""
         return self.engine().adjacency(reverse=reverse)
+
+    def plane_specs(self) -> dict:
+        """Every packed plane of the index with its valid-bit width:
+        ``name -> (array, nbits)``.  Aux closure planes (``r_*``) are
+        included when present — they are what updates warm-start from, so
+        their footprint is part of the maintained index."""
+        cfg = self.cfg
+        specs = {
+            "h_vtx": (self.h_vtx, cfg.vtx_bits),
+            "h_lab": (self.h_lab, cfg.lab_bits),
+            "v_vtx": (self.v_vtx, cfg.vtx_bits),
+            "v_lab": (self.v_lab, cfg.lab_bits),
+            "n_out": (self.n_out, cfg.vtx_bits),
+            "n_in": (self.n_in, cfg.vtx_bits),
+            "r_vtx": (self.r_vtx, cfg.vtx_bits),
+            "r_lab": (self.r_lab, cfg.lab_bits),
+            "r_in": (self.r_in, cfg.vtx_bits),
+        }
+        return {k: v for k, v in specs.items() if v[0] is not None}
+
+    def compressed_planes(self) -> dict:
+        """Two-level compressed form of every plane (lazily built, cached
+        on the index, row-patched by ``update_index``)."""
+        for name, (arr, nbits) in self.plane_specs().items():
+            if name not in self._comp:
+                self._comp[name] = compressed_mod.compress(
+                    np.asarray(arr), nbits=nbits)
+        return dict(self._comp)
+
+    def summary_flags(self) -> dict:
+        """Host row-summary flags from the compressed planes (level 1):
+        ``sat_out[u]`` / ``sat_in[v]`` mark vertices whose global Bloom
+        row is ALL_ONE — their membership filter passes for *every*
+        counterpart and their query corridor is the whole vertex set, so
+        the query path can answer containment and skip corridor probes
+        without materializing the dense rows."""
+        comp = self.compressed_planes()
+        return {
+            "sat_out": comp["n_out"].row_states == compressed_mod.ALL_ONE,
+            "sat_in": comp["n_in"].row_states == compressed_mod.ALL_ONE,
+        }
+
+    def summary_flags_dev(self) -> tuple:
+        """Device (sat_out, sat_in) bool [V] for the filter cascade."""
+        if self._sat_dev is None:
+            flags = self.summary_flags()
+            self._sat_dev = (jnp.asarray(flags["sat_out"]),
+                             jnp.asarray(flags["sat_in"]))
+        return self._sat_dev
+
+    def index_memory_stats(self) -> dict:
+        """Per-plane and total footprint, dense vs two-level compressed."""
+        planes = {}
+        dense = comp = 0
+        for name, c in sorted(self.compressed_planes().items()):
+            planes[name] = {"dense_bytes": c.dense_nbytes,
+                            "compressed_bytes": c.nbytes,
+                            "ratio": round(c.ratio, 3)}
+            dense += c.dense_nbytes
+            comp += c.nbytes
+        return {"planes": planes, "dense_bytes": dense,
+                "compressed_bytes": comp,
+                "ratio": round(dense / max(comp, 1), 3)}
 
     def size_bytes(self, logical: bool = True) -> int:
         """Index footprint.  ``logical`` counts only the ways in use (the
@@ -431,6 +500,31 @@ def _assemble_planes(graph: Graph, cfg: TDRConfig, eng, *, vtx_w, lab_w,
         fixpoint_rounds=rounds, disc=disc,
         base_v=base_v, base_l=base_l, base_r=base_r,
         r_vtx=r_vtx, r_lab=r_lab, r_in=r_in, d_vtx=d_vtx, d_lab=d_lab)
+
+
+def _carry_compressed(old_comp: dict, idx2: TDRIndex,
+                      row_sets: dict) -> dict:
+    """Carry an index's compressed-plane cache across a row-granular
+    update: for each cached plane, only the sub-rows derived from the
+    vertex rows that could have changed are re-summarized
+    (``CompressedPlanes.patch_rows``) — the update never densifies."""
+    out = {}
+    v_n = idx2.graph.n_vertices
+    specs = idx2.plane_specs()
+    for name, c in old_comp.items():
+        if name not in specs or name not in row_sets:
+            continue
+        arr, _ = specs[name]
+        vrows = np.asarray(row_sets[name], dtype=np.int64)
+        flat = arr.reshape(-1, c.n_words)
+        mult = flat.shape[0] // max(v_n, 1)
+        sub = (vrows[:, None] * mult
+               + np.arange(mult, dtype=np.int64)[None, :]).reshape(-1)
+        if sub.size == 0:
+            out[name] = c
+            continue
+        out[name] = c.patch_rows(sub, np.asarray(flat[jnp.asarray(sub)]))
+    return out
 
 
 # ------------------------------------------------------ incremental update
@@ -787,5 +881,14 @@ def update_index(index: TDRIndex, delta: "GraphDelta | None" = None, *,
         r_vtx=r_vtx2, r_lab=r_lab2, r_in=r_in2,
         d_vtx=d_vtx2, d_lab=d_lab2)
     idx2._engines[eng.backend] = eng
+    if index._comp:
+        chg_fwd = np.flatnonzero(changed)
+        chg_rev = np.flatnonzero(
+            np.asarray(jnp.any(r_in2 != index.r_in, axis=1)))
+        idx2._comp = _carry_compressed(
+            index._comp, idx2,
+            {"h_vtx": rows, "h_lab": rows, "v_vtx": rows, "v_lab": rows,
+             "n_out": rows, "n_in": chg_rev, "r_vtx": chg_fwd,
+             "r_lab": chg_fwd, "r_in": chg_rev})
     st.wall_s = time.perf_counter() - t0
     return idx2

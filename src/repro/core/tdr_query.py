@@ -149,6 +149,7 @@ class QueryStats:
     exact_qids: list = dataclasses.field(default_factory=list, repr=False)
     corridor_active: int = 0   # Σ |V'| over dispatched phase-2 chunks
     corridor_total: int = 0    # Σ |V|  over dispatched phase-2 chunks
+    saturated_chunks: int = 0  # chunks whose probe the summaries answered
     phase1_s: float = 0.0      # planner + filter cascade wall time
     phase2_s: float = 0.0      # exact expansion wall time (incl. collect)
     # device round counters, fetched lazily on first .exact_rounds access
@@ -302,11 +303,18 @@ def compile_queries(index: TDRIndex,
 @functools.partial(jax.jit, static_argnames=("k", "mode"))
 def _filter_cascade(u, v, req_w, forb_w, null_w,
                     vtx_packed, h_vtx, h_lab, v_vtx, v_lab,
-                    n_out, n_in, push, pop, *, k: int, mode: str):
+                    n_out, n_in, sat_out, sat_in, push, pop,
+                    *, k: int, mode: str):
     """Vectorised filter cascade -> verdict [J] in {FALSE, TRUE, UNKNOWN}.
 
     All label planes arrive packed; the per-way group predicate runs through
-    ``kernels.ops.filter_ways`` (fused Pallas kernel / ref oracle)."""
+    ``kernels.ops.filter_ways`` (fused Pallas kernel / ref oracle).
+
+    ``sat_out``/``sat_in`` are the level-1 row summaries of the compressed
+    ``N_out``/``N_in`` planes (bool [V]): an ALL_ONE row contains every
+    Bloom pattern, so its membership test is answered by the summary bit —
+    bit-identical by construction, and on saturated traffic the word-level
+    containment scan contributes nothing."""
     from repro.kernels import ops  # deferred: kernels import repro.core
 
     vbits = vtx_packed[v]            # [J, Wv]
@@ -319,9 +327,10 @@ def _filter_cascade(u, v, req_w, forb_w, null_w,
     same = u == v
     true_same = same & req_empty
 
-    # global membership filters (sound negatives)
-    topo_out = bitset.words_contain(n_out[u], vbits)
-    topo_in = bitset.words_contain(n_in[v], ubits)
+    # global membership filters (sound negatives); summary-first: a
+    # saturated row answers TRUE without the word-level containment
+    topo_out = sat_out[u] | bitset.words_contain(n_out[u], vbits)
+    topo_in = sat_in[v] | bitset.words_contain(n_in[v], ubits)
     topo_maybe = topo_out & topo_in
 
     # interval: DFS-forest ancestor => topologically reachable (sound positive)
@@ -1143,13 +1152,14 @@ def answer_plan(index: TDRIndex, plan: QueryPlan,
         verdict = dist_mod.filter_cascade_sharded(index, plan_p, mesh,
                                                   eng.kernel_mode)
     else:
+        sat_out_d, sat_in_d = index.summary_flags_dev()
         verdict = np.asarray(_filter_cascade(
             pd_u, pd_v,
             jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w),
             _null_words_dev(index.cfg),
             index.vtx_packed, index.h_vtx, index.h_lab, index.v_vtx,
-            index.v_lab, index.n_out, index.n_in, index.push, index.pop,
-            k=index.cfg.k, mode=eng.kernel_mode))
+            index.v_lab, index.n_out, index.n_in, sat_out_d, sat_in_d,
+            index.push, index.pop, k=index.cfg.k, mode=eng.kernel_mode))
 
     real = plan_p.qid >= 0
     stats.filter_false += int(((verdict == FALSE) & real).sum())
@@ -1195,9 +1205,27 @@ def answer_plan(index: TDRIndex, plan: QueryPlan,
     elif exact_mode == "compact":
         compact_flags = [True] * len(starts)
     else:
-        unions = ex.chunk_union_counts(dev, pending, exact_chunk)
-        compact_flags = [
-            graph_mod.pad_bucket(int(u), lo=32) < v_n for u in unions]
+        # summary-first probe skip: a chunk whose every job has ALL_ONE
+        # N_out[u] and N_in[v] rows (level-1 summaries of the compressed
+        # planes) has corridor == full V *exactly*, so the probe would
+        # always pick the full-graph path — settle those chunks from the
+        # host flags and probe only the rest (whole chunks, in order, so
+        # ``chunk_union_counts``'s sequential grouping stays aligned)
+        flags = index.summary_flags()
+        jsat = (flags["sat_out"][plan_p.u[pending]]
+                & flags["sat_in"][plan_p.v[pending]])
+        sat_chunks = [bool(jsat[c0:c0 + exact_chunk].all())
+                      for c0 in starts]
+        stats.saturated_chunks += sum(sat_chunks)
+        compact_flags = [False] * len(starts)
+        probe_starts = [c0 for c0, s in zip(starts, sat_chunks) if not s]
+        if probe_starts:
+            probe_jobs = np.concatenate(
+                [pending[c0:c0 + exact_chunk] for c0 in probe_starts])
+            unions = ex.chunk_union_counts(dev, probe_jobs, exact_chunk)
+            for c0, u in zip(probe_starts, unions):
+                compact_flags[c0 // exact_chunk] = (
+                    graph_mod.pad_bucket(int(u), lo=32) < v_n)
     member = None
     mem_off = {}
     if any(compact_flags):

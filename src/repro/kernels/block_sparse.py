@@ -1,0 +1,190 @@
+"""Block-sparse boolean-OR bit-matmul Pallas kernel.
+
+Same contraction as ``bitset_matmul`` —
+
+    out[i, w] = OR_j ( A[i, j]  AND  X[j, w] )
+
+— but ``A`` arrives in the two-level block form of
+``repro.core.compressed.BlockCompressed``: a 2-bit state per
+``(row-block × word-block)`` tile (ALL_ZERO / ALL_ONE / MIXED) plus a
+compacted pool holding only the MIXED detail blocks.  The kernel's grid
+runs over ``(row-block, out-word tile, k-block)`` and per step
+
+* **skips** the whole k-step when the A-block is ALL_ZERO *or* the
+  corresponding X k-block carries no set bits this round (``x_any`` —
+  the per-round frontier summary the delta fixpoint recomputes, which is
+  what makes late closure rounds nearly free),
+* **short-circuits** ALL_ONE blocks to a precomputed per-k-block
+  column-OR of X (``col_or`` — a full block contributes the OR of its
+  columns, no contraction needed),
+* **gathers** MIXED blocks from the pool via scalar-prefetched slot ids
+  (``pltpu.PrefetchScalarGridSpec``: the slot indirection is resolved in
+  SMEM before the block's DMA is issued) and contracts them with the
+  same static bit-unrolled VPU accumulation as the dense kernel.
+
+States and slots are *inputs*, not statics, so one compiled closure
+serves every round of a fixpoint while the frontier summary changes
+underneath it.  ``block_sparse_matmul_ref`` is the pure-jnp oracle (and
+the segment-family lowering): identical semantics via a gathered
+batched unpack-matmul over pool blocks plus a segment-OR, bit-for-bit
+equal to the dense ``ref.bitset_matmul_ref``.
+
+Tile notes: the out tile is ``(br, TW)`` (``br`` defaults to 8, the
+uint32 sublane minimum) and pool blocks are ``(br, bw)`` words — narrow
+lanes relative to the 128-lane register shape, which interpret mode (CI)
+does not care about; on hardware the pool would be laid out lane-padded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bitset
+from repro.core.compressed import ALL_ONE, MIXED, BlockCompressed
+
+WORD = 32
+
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or getattr(pltpu, "TPUCompilerParams"))
+
+
+def _kernel(states_ref, slots_ref, xany_ref, pool_ref, x_ref, colr_ref,
+            o_ref, *, bw: int):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    st = states_ref[i, k]
+    live = xany_ref[k] != 0
+
+    @pl.when(live & (st == ALL_ONE))
+    def _one():
+        o_ref[...] |= colr_ref[0][None, :]
+
+    @pl.when(live & (st == MIXED))
+    def _mixed():
+        a = pool_ref[0]                        # [br, bw] uint32
+        x = x_ref[...]                         # [bw*32, TW] uint32
+        acc = jnp.zeros_like(o_ref[...])
+        for wk in range(bw):                   # static bit-plane unroll
+            col = a[:, wk]
+            for b in range(WORD):
+                sel = jnp.uint32(0) - ((col >> jnp.uint32(b))
+                                       & jnp.uint32(1))
+                acc |= sel[:, None] & x[wk * WORD + b][None, :]
+        o_ref[...] |= acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("br", "bw", "tw", "interpret"))
+def _block_sparse_call(states, slots, xany, pool, x, colr, *, br: int,
+                       bw: int, tw: int, interpret: bool):
+    mb, kb = states.shape
+    bk = bw * WORD
+    w = x.shape[1]
+    tw = min(tw, w) or 1
+    w_pad = -(-w // tw) * tw
+    x_p = jnp.pad(x, ((0, 0), (0, w_pad - w)))
+    colr_p = jnp.pad(colr, ((0, 0), (0, w_pad - w)))
+
+    grid = (mb, w_pad // tw, kb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                 # states, slots, x_any
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bw),
+                         lambda i, j, k, st, sl, xa: (sl[i, k], 0, 0)),
+            pl.BlockSpec((bk, tw), lambda i, j, k, st, sl, xa: (k, j)),
+            pl.BlockSpec((1, tw), lambda i, j, k, st, sl, xa: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((br, tw),
+                               lambda i, j, k, st, sl, xa: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bw=bw),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * br, w_pad), jnp.uint32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(states.astype(jnp.int32), slots, xany, pool, x_p, colr_p)
+    return out[:, :w]
+
+
+def _pad_k(x: jax.Array, k_pad: int) -> jax.Array:
+    if x.shape[0] < k_pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((k_pad - x.shape[0],) + x.shape[1:], x.dtype)],
+            axis=0)
+    return x
+
+
+def _k_block_summaries(x: jax.Array, kb: int, bk: int):
+    """Per-k-block column-OR and any-bit flags of the X operand."""
+    xr = _pad_k(x, kb * bk).reshape(kb, bk, x.shape[1])
+    colr = jax.lax.reduce(xr, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    xany = jnp.any(xr != 0, axis=(1, 2)).astype(jnp.int32)
+    return colr, xany
+
+
+def block_sparse_matmul(comp: BlockCompressed, x: jax.Array, *,
+                        tw: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """``OR_j (A[i,j] & X[j,:])`` with A in block-compressed form.
+
+    Args:
+      comp: block states/slots/pool of the packed A ``[M, K//32]``.
+      x:    uint32 ``[V, W]`` packed bitsets, ``V <= K`` (zero-padded).
+    Returns:
+      uint32 ``[M, W]`` — bit-identical to the dense kernel.
+    """
+    m, _ = comp.shape
+    mb, kb = comp.grid
+    bk = comp.bw * WORD
+    colr, xany = _k_block_summaries(x, kb, bk)
+    out = _block_sparse_call(comp.states, comp.slots, xany, comp.pool,
+                             _pad_k(x, kb * bk), colr, br=comp.br,
+                             bw=comp.bw, tw=tw, interpret=interpret)
+    return out[:m]
+
+
+# ------------------------------------------------------------- jnp oracle
+def block_sparse_matmul_ref(comp: BlockCompressed,
+                            x: jax.Array) -> jax.Array:
+    """Pure-jnp lowering of the same block-sparse contraction (the
+    segment-family path): ONE blocks resolve through the k-block
+    column-OR, MIXED blocks are gathered from the pool and contracted by
+    a vmapped unpack-matmul, then segment-OR'd into their row-blocks."""
+    m, _ = comp.shape
+    mb, kb = comp.grid
+    br, bw = comp.br, comp.bw
+    bk = bw * WORD
+    w = x.shape[1]
+    xr = _pad_k(x, kb * bk).reshape(kb, bk, w)
+    colr, xany = _k_block_summaries(x, kb, bk)
+
+    one = (comp.states == ALL_ONE) & (xany != 0)[None, :]
+    one_or = jax.lax.reduce(
+        jnp.where(one[:, :, None], colr[None, :, :], jnp.uint32(0)),
+        jnp.uint32(0), jax.lax.bitwise_or, (1,))         # [MB, W]
+
+    def blk(a_blk, x_blk):                               # [br,bw],[bk,W]
+        a_bool = bitset.unpack_bits(a_blk, bk)
+        x_bits = bitset.unpack_bits(x_blk, w * WORD)
+        prod = jnp.dot(a_bool.astype(jnp.int32),
+                       x_bits.astype(jnp.int32)) > 0
+        return bitset.pack_bits(prod)                    # [br, W]
+
+    contrib = jax.vmap(blk)(comp.pool, xr[comp.mix_bj])  # [P, br, W]
+    mix_or = bitset.segment_or_words(
+        contrib.reshape(contrib.shape[0], br * w), comp.mix_bi,
+        num_segments=mb).reshape(mb, br, w)
+    out = (mix_or | one_or[:, None, :]).reshape(mb * br, w)
+    return out[:m]

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitset
-from . import ref
+from . import block_sparse, ref
 from .bitset_matmul import bitset_matmul
 from .pattern_filter import way_filter
 from .popcount import popcount_rows
@@ -62,6 +62,26 @@ def frontier_step(a_packed: jax.Array, x: jax.Array, *,
         return frontier_step_mxu(a_packed, x)
     if mode == "ref":
         return ref.bitset_matmul_ref(a_packed, x)
+    raise ValueError(mode)
+
+
+def frontier_step_sparse(comp, x: jax.Array, *,
+                         mode: str = "auto") -> jax.Array:
+    """Block-sparse expansion round over a ``BlockCompressed`` adjacency:
+    ZERO blocks skipped, ONE blocks short-circuited to a column-OR, MIXED
+    blocks gathered from the pool (see ``kernels.block_sparse``).
+
+    mode: "auto" | "pallas" | "interpret" | "ref" — same contract as
+    ``frontier_step``; "ref" is the pure-jnp segment-family lowering.
+    """
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode in ("pallas", "interpret"):
+        KERNEL_INVOCATIONS["block_sparse_matmul"] += 1
+        return block_sparse.block_sparse_matmul(
+            comp, x, interpret=(mode == "interpret"))
+    if mode == "ref":
+        return block_sparse.block_sparse_matmul_ref(comp, x)
     raise ValueError(mode)
 
 

@@ -11,7 +11,7 @@ Per cell this driver:
   2. assembles sharded ShapeDtypeStruct inputs via ``input_specs()``
      (no allocation anywhere),
   3. lowers + compiles the step function (train_step for train_4k,
-     prefill for prefill_32k, serve_step for decode shapes),
+     prefill for prefill_32k, a greedy decode_step for decode shapes),
   4. records ``memory_analysis()`` (fits-per-chip proof),
      loop-aware HLO costs (utils/hlo.py) and the three roofline terms,
   5. dumps everything to JSON for ARCHITECTURE.md.
@@ -45,8 +45,8 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import sharding
 from repro.models import model as model_lib
 from repro.models import init_params, pspec
+from repro.models import decode_step
 from repro.train import AdamWConfig, make_train_step
-from repro.train.serve_step import make_serve_step
 from repro.train.train_step import init_train_state
 from repro.utils import hlo as hlo_lib
 from repro.utils import roofline as roof_lib
@@ -59,7 +59,7 @@ from repro.utils import roofline as roof_lib
 # on deepseek (ARCHITECTURE.md §Perf, iteration D1).
 TRAIN_MICROBATCHES = {
     "gemma3-27b": 8, "dbrx-132b": 8, "deepseek-v2-236b": 8,
-    "phi3-medium-14b": 8, "stablelm-12b": 8, "phi3-mini-3.8b": 8,
+    "phi3-mini-3.8b": 8,
     "phi-3-vision-4.2b": 8, "musicgen-large": 8, "zamba2-1.2b": 8,
     "rwkv6-3b": 4,
 }
@@ -173,12 +173,10 @@ def lower_cell(arch: str, shape_name: str, the_mesh, *,
             lowered = fn.lower(*args)
         n_tokens = shape.global_batch * shape.seq_len
         mf = roof_lib.model_flops_forward(cfg.n_active_params(), n_tokens)
-    else:  # decode
-        serve = make_serve_step(cfg)
-
+    else:  # decode: greedy single-token step over the model's decode cell
         def decode_fn(params, cache, tokens):
-            nxt, logits, cache = serve(params, cache, tokens)
-            return nxt, cache
+            logits, cache = decode_step(cfg, params, cache, tokens)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
         fn = jax.jit(decode_fn, donate_argnums=1)
         with pspec.use_mesh(the_mesh, pspec.default_mapping(

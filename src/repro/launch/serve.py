@@ -193,6 +193,12 @@ class QueryServer:
         self._special: tuple[int, ...] | None = None
         self._warmed_to = 0
 
+    def memory_stats(self) -> dict:
+        """Resident index footprint: per-plane dense vs compressed bytes
+        and the overall ratio (``TDRIndex.index_memory_stats``).  Reads
+        the live index reference, so the numbers track update barriers."""
+        return self.index.index_memory_stats()
+
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "QueryServer":
         if self._thread is not None:
@@ -600,6 +606,11 @@ def main() -> None:
 
     pool = mixed_pool(g, 256)
     with QueryServer(idx, backend=args.backend) as server:
+        mem = server.memory_stats()
+        print(f"[serve] index planes "
+              f"{mem['dense_bytes'] / 1e6:.1f} MB dense -> "
+              f"{mem['compressed_bytes'] / 1e6:.1f} MB compressed "
+              f"({mem['ratio']:.2f}x)")
         t0 = time.perf_counter()
         added = server.warmup(pool)
         print(f"[serve] warmup {time.perf_counter() - t0:.2f}s "

@@ -8,7 +8,7 @@ CPU device never notice.
 
 Divisibility guard: a logical axis resolves to its physical axis only when
 the dimension divides evenly; otherwise that dim is left unsharded (e.g.
-phi3-medium's 40 heads on a 16-wide model axis — documented in
+a 40-head model on a 16-wide model axis — documented in
 ARCHITECTURE.md §Perf as a padding opportunity).
 """
 from __future__ import annotations

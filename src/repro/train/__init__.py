@@ -1,4 +1,3 @@
-from . import optimizer, serve_step, train_step
+from . import optimizer, train_step
 from .optimizer import AdamWConfig
-from .serve_step import make_serve_step
 from .train_step import init_train_state, loss_fn, make_train_step

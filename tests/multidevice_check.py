@@ -67,6 +67,18 @@ def main() -> None:
     np.testing.assert_array_equal(np.asarray(got_r), np.asarray(want_r))
     print("[ok] distributed closure == single-device engine closure")
 
+    # delta-row exchange: bit-identical for any budget, including budgets
+    # far below the per-device row count (carry-over path) and on the
+    # 2-axis mesh (flat device-id computation)
+    for mesh, budget in ((mesh1, 1), (mesh1, 3), (mesh1, 64), (mesh2, 2)):
+        got_d = distributed.distributed_closure(g, words, mesh,
+                                                row_budget=budget)
+        np.testing.assert_array_equal(
+            np.asarray(got_d), np.asarray(want_r),
+            err_msg=f"delta exchange budget={budget} "
+                    f"mesh={dict(mesh.shape)}")
+    print("[ok] delta-row exchange bit-identical at budgets 1/3/64 + 2-axis")
+
     rng = np.random.default_rng(0)
     queries = mixed_queries(rng, g, 24)
     want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in queries]

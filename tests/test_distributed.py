@@ -65,12 +65,14 @@ def test_filter_cascade_sharded_matches_local():
     jp = -(-plan.n_jobs // mesh.devices.size) * mesh.devices.size
     plan_p = plan.pad_to(max(jp, 16))
     import jax.numpy as jnp
+    sat_out, sat_in = idx.summary_flags_dev()
     want = np.asarray(tdr_query._filter_cascade(
         jnp.asarray(plan_p.u), jnp.asarray(plan_p.v),
         jnp.asarray(plan_p.req_w), jnp.asarray(plan_p.forb_w),
         tdr_query._null_words_dev(idx.cfg),
         idx.vtx_packed, idx.h_vtx, idx.h_lab, idx.v_vtx, idx.v_lab,
-        idx.n_out, idx.n_in, idx.push, idx.pop, k=idx.cfg.k, mode="ref"))
+        idx.n_out, idx.n_in, sat_out, sat_in, idx.push, idx.pop,
+        k=idx.cfg.k, mode="ref"))
     got = distributed.filter_cascade_sharded(idx, plan_p, mesh, "ref")
     np.testing.assert_array_equal(got, want)
 

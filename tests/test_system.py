@@ -82,8 +82,8 @@ def test_lm_end_to_end():
     import jax.numpy as jnp
     import repro.configs as C
     from repro.data import DataConfig, batch_for_step
-    from repro.models import init_params, prefill
-    from repro.train import (AdamWConfig, init_train_state, make_serve_step,
+    from repro.models import decode_step, init_params, prefill
+    from repro.train import (AdamWConfig, init_train_state,
                              make_train_step)
     cfg = C.get("musicgen-large").reduced()
     dc = DataConfig(task="lm", vocab=cfg.vocab, seq_len=32, global_batch=4,
@@ -98,10 +98,10 @@ def test_lm_end_to_end():
     batch = batch_for_step(dc, 0)
     last, cache = prefill(cfg, state["params"], batch["tokens"],
                           batch["media"], max_len=40)
-    serve = make_serve_step(cfg)
     tok = jnp.argmax(last, -1).astype(jnp.int32)
     outs = []
     for _ in range(4):
-        tok, _, cache = serve(state["params"], cache, tok)
+        logits, cache = decode_step(cfg, state["params"], cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
         outs.append(tok)
     assert all(o.shape == (4,) for o in outs)

@@ -1,6 +1,7 @@
-"""tableIII + tableIV + serving regression guard for CI.
+"""tableIII + tableIV + serving + recovery regression guard for CI.
 
-Re-runs the tableIII, tableIV and serving smoke benchmarks and compares
+Re-runs the tableIII, tableIV, serving and recovery smoke benchmarks and
+compares
 each gated row's ``us_per_call`` against the committed rows in
 ``BENCH_queries.json`` (the newest ``pr`` generation per (name,
 backend)).  Gated rows are the reachable-query (``*-true``) tableIII
@@ -9,7 +10,9 @@ rows, the serving closed-loop p95-latency row
 (``*/index-bytes`` — build time drift-normalized like every timing row,
 plus ``compressed_bytes`` compared *directly*: bytes are deterministic,
 so a >``--factor`` growth of the compressed index fails without any
-drift allowance), and the sparse-closure rows (``*closure*-sparse``).
+drift allowance), the sparse-closure rows (``*closure*-sparse``), and
+the snapshot-restore row (``recovery/*/restore`` — restore must stay
+cheap relative to rebuild; the ≥5x contract itself asserts in-module).
 Timing rows are DFS-normalized with the same drift factor (the serving
 row gets ``SERVING_SLACK`` on top: concurrent-client queueing latency is
 far noisier than single-thread us/call, and its tight contract lives in
@@ -68,9 +71,11 @@ SERVING_SLACK = 3.0
 def _gated(name: str) -> bool:
     """Rows whose us_per_call regressions fail the build: reachable
     tableIII rows, the serving closed-loop p95 latency row, the index
-    build+footprint rows and the sparse-closure rows."""
+    build+footprint rows, the sparse-closure rows, and the snapshot
+    restore row (the ≥5x-vs-rebuild contract also asserts in-module)."""
     return (name.endswith("-true") or name.endswith("/closed-p95")
-            or name.endswith("/index-bytes") or name.endswith("-sparse"))
+            or name.endswith("/index-bytes") or name.endswith("-sparse")
+            or name.endswith("/restore"))
 
 
 def _slack(name: str) -> float:
@@ -99,7 +104,8 @@ def check(baseline_path: str, backends: list, factor: float,
     best: dict = {}
     order = []
     for _ in range(max(passes, 1)):
-        for rec in run_mod.collect(scale, only="tableIII,tableIV,serving",
+        for rec in run_mod.collect(scale,
+                                   only="tableIII,tableIV,serving,recovery",
                                    backends=backends):
             key = (rec["name"], rec["backend"])
             if key not in best:

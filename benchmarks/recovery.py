@@ -1,0 +1,156 @@
+"""Durability benchmark: snapshot restore + log replay vs full rebuild.
+
+Grades the recovery path the way a restarting replica would use it:
+
+* **restore** — ``snapshot.load_index`` wall time (validate CRCs,
+  decompress the two-level planes, seed the compressed cache) against a
+  from-scratch layout-pinned ``build_index`` of the same graph.  The
+  whole point of the snapshot subsystem is that restarting is cheap:
+  the committed contract is restore ≥5x faster than rebuild at ER n=512
+  and the module *asserts* it (with the usual pallas-on-CPU interpret
+  carve-out, where the rebuild baseline is dispatch-bound and
+  artificially cheap — that leg reports ``gated: false``).  Bit-identity
+  of the restored planes is asserted unconditionally: a fast restore of
+  the wrong bits must fail the run, not write a pretty row.
+* **replay** — recovery tail latency: per-record cost of replaying a
+  write-ahead delta log (``deltalog.DeltaLog``) through
+  ``tdr_build.update_index`` on top of the loaded snapshot, asserted
+  bit-identical to a rebuild of the final graph.
+
+Timings are min-of-3 like the other rebuild baselines (with a second
+measurement attempt folded in before the floor may fire — shared CI
+hosts spike single windows on scheduler noise); save cost and snapshot
+size ride along in the derived field.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core import deltalog, engine as engine_mod, graph as G
+from repro.core import snapshot, tdr_build
+
+N_RECORDS = 8
+MIN_SPEEDUP = 5.0        # restore vs rebuild, ER n=512 contract
+
+
+def _block(idx):
+    jax.block_until_ready((idx.h_vtx, idx.v_lab, idx.n_in, idx.r_vtx))
+
+
+def _planes_equal(a, b) -> bool:
+    for p in ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in",
+              "push", "pop", "g_count", "r_vtx", "r_lab", "r_in"):
+        if not np.array_equal(np.asarray(getattr(a, p)),
+                              np.asarray(getattr(b, p))):
+            return False
+    return True
+
+
+def run(scale: str = "smoke", seed: int = 0,
+        backend: str | None = None) -> list:
+    from . import common
+    sc = common.SCALES[scale]
+    v = max(sc["v"], 512)     # the speedup contract is ER n=512 scale
+    g = G.erdos_renyi(v, 4.0, 8, seed=seed)
+    idx = tdr_build.build_index(g, tdr_build.TDRConfig(), backend=backend)
+    _block(idx)
+    idx.compressed_planes()   # canonical compressed form, cached
+    prefix = f"recovery/er{v}"
+    workdir = tempfile.mkdtemp(prefix="tdr-recovery-bench-")
+    try:
+        path = os.path.join(workdir, "snap.tdr")
+        interpret = (engine_mod.resolve_backend(backend or "auto")
+                     == "pallas" and jax.default_backend() != "tpu")
+        t_save = t_load = t_reb = float("inf")
+        n_bytes = 0
+        loaded = ref = None
+        # two measurement attempts, mins accumulated across both — a
+        # single scheduler-noise window on a shared host must not trip
+        # the speedup floor (same best-of philosophy as benchmarks.guard)
+        for attempt in range(2):
+            for _ in range(3):
+                t0 = time.perf_counter()
+                n_bytes = snapshot.save_index(idx, path, lsn=0)
+                t_save = min(t_save, time.perf_counter() - t0)
+            for _ in range(3):
+                t0 = time.perf_counter()
+                loaded, _lsn = snapshot.load_index(path)
+                _block(loaded)
+                t_load = min(t_load, time.perf_counter() - t0)
+            for _ in range(3):
+                t0 = time.perf_counter()
+                ref = tdr_build.build_index(g, tdr_build.TDRConfig(),
+                                            layout=idx.disc,
+                                            backend=backend)
+                _block(ref)
+                t_reb = min(t_reb, time.perf_counter() - t0)
+            if interpret or t_reb / t_load >= MIN_SPEEDUP:
+                break
+
+        if not _planes_equal(loaded, ref):
+            raise RuntimeError(
+                "recovery: restored snapshot diverged from the layout-"
+                "pinned rebuild — bit-identity contract broken")
+        speedup = t_reb / t_load
+        if not interpret and speedup < MIN_SPEEDUP:
+            raise RuntimeError(
+                f"recovery: restore is only {speedup:.1f}x faster than a "
+                f"rebuild at ER n={v} (contract: >={MIN_SPEEDUP}x); the "
+                "snapshot load path has regressed")
+        rows = [(
+            f"{prefix}/restore", round(t_load * 1e6, 1),
+            f"rebuild_us={t_reb * 1e6:.1f};save_us={t_save * 1e6:.1f};"
+            f"speedup={speedup:.1f};snapshot_bytes={n_bytes};"
+            f"correct=True",
+            # interpret-mode pallas: rebuild baseline is dispatch-bound,
+            # report the leg without gating it
+            {**({"gated": False} if interpret else {})})]
+
+        # ---- log replay tail -------------------------------------------
+        rng = np.random.default_rng(seed + 1)
+        lp = os.path.join(workdir, "deltas.wal")
+        log = deltalog.DeltaLog(lp)
+        gc = g
+        for _ in range(N_RECORDS):
+            while True:
+                u, w = int(rng.integers(v)), int(rng.integers(v))
+                if u != w:
+                    break
+            d = gc.apply_updates([(u, w, int(rng.integers(8)))], [])
+            log.append(d.added, d.removed)
+            gc = d.graph
+
+        def replay(base):
+            cur = base
+            for _lsn, added, removed in log.replay(0):
+                delta = cur.graph.apply_updates(added, removed)
+                cur = tdr_build.update_index(cur, delta, backend=backend)
+            _block(cur)
+            return cur
+
+        replay(loaded)                        # warm the update shapes
+        t0 = time.perf_counter()
+        final = replay(loaded)
+        t_replay = time.perf_counter() - t0
+        log.close()
+
+        ref_fin = tdr_build.build_index(gc, tdr_build.TDRConfig(),
+                                        layout=idx.disc, backend=backend)
+        if not _planes_equal(final, ref_fin):
+            raise RuntimeError(
+                "recovery: snapshot + log replay diverged from a rebuild "
+                "of the final graph — bit-identity contract broken")
+        rows.append((
+            f"{prefix}/replay", round(t_replay / N_RECORDS * 1e6, 1),
+            f"records={N_RECORDS};total_us={t_replay * 1e6:.1f};"
+            f"restore_plus_replay_us={(t_load + t_replay) * 1e6:.1f};"
+            f"correct=True"))
+        return rows
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)

@@ -25,7 +25,7 @@ import json
 from repro.core import engine as engine_mod
 
 from . import (common, index_cost, kernels_bench, lcr_bench, queries,
-               scalability, serving, synthetic_sweeps, updates)
+               recovery, scalability, serving, synthetic_sweeps, updates)
 
 MODULES = [
     ("tableIII", queries),
@@ -36,6 +36,7 @@ MODULES = [
     ("kernels", kernels_bench),
     ("serving", serving),
     ("updates", updates),
+    ("recovery", recovery),
 ]
 
 

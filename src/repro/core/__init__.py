@@ -8,9 +8,12 @@ Public API::
     idx = tdr_build.build_index(g, tdr_build.TDRConfig())
     ans = tdr_query.answer_batch(idx, [(u, v, pattern.parse("l0 & !l3"))])
 """
-from . import bitset, dfs_baseline, distributed, engine, graph, lcr, pattern
-from . import tdr_build, tdr_query
+from . import bitset, deltalog, dfs_baseline, distributed, engine, graph
+from . import lcr, pattern, snapshot, tdr_build, tdr_query
+from .deltalog import DeltaLog, LogCorrupt
 from .engine import Engine, EngineConfig, make_engine, resolve_backend
+from .snapshot import (SnapshotCorrupt, SnapshotVersionMismatch,
+                       load_index, save_index)
 from .graph import Graph, erdos_renyi, fig2_example, preferential_attachment
 from .pattern import parse, all_of, any_of, none_of, lcr as lcr_pattern
 from .tdr_build import TDRConfig, TDRIndex, build_index
@@ -22,6 +25,8 @@ __all__ = [
     "build_index", "answer", "answer_batch", "parse",
     "all_of", "any_of", "none_of", "lcr_pattern",
     "erdos_renyi", "preferential_attachment", "fig2_example",
-    "bitset", "dfs_baseline", "distributed", "engine", "graph", "lcr",
-    "pattern", "tdr_build", "tdr_query",
+    "DeltaLog", "LogCorrupt", "SnapshotCorrupt",
+    "SnapshotVersionMismatch", "load_index", "save_index",
+    "bitset", "deltalog", "dfs_baseline", "distributed", "engine",
+    "graph", "lcr", "pattern", "snapshot", "tdr_build", "tdr_query",
 ]

@@ -169,6 +169,23 @@ class TDRIndex:
         }
         return {k: v for k, v in specs.items() if v[0] is not None}
 
+    def aux_plane_specs(self) -> dict:
+        """The incremental-maintenance planes with their valid-bit
+        widths: ``name -> (array, nbits)`` for the one-hop bases,
+        converged closures already in ``plane_specs``, and the vertical
+        working planes.  ``repro.core.snapshot`` serializes the union of
+        this and ``plane_specs`` so a restored index chains
+        ``update_index`` exactly like the one that was saved."""
+        cfg = self.cfg
+        specs = {
+            "base_v": (self.base_v, cfg.vtx_bits),
+            "base_l": (self.base_l, cfg.lab_bits),
+            "base_r": (self.base_r, cfg.vtx_bits),
+            "d_vtx": (self.d_vtx, cfg.vtx_bits),
+            "d_lab": (self.d_lab, cfg.lab_bits),
+        }
+        return {k: v for k, v in specs.items() if v[0] is not None}
+
     def compressed_planes(self) -> dict:
         """Two-level compressed form of every plane (lazily built, cached
         on the index, row-patched by ``update_index``)."""

@@ -43,6 +43,19 @@ flight.  The design goal is **zero jit recompiles at steady state**:
   ``submit_update`` returns are therefore always answered — and cached —
   against the post-update graph; queries submitted before it see the
   pre-update graph.  No batch ever straddles the swap.
+* **Durability.**  ``persist_to(dir)`` checkpoints the index
+  (``repro.core.snapshot``) and attaches a write-ahead delta log
+  (``repro.core.deltalog``): updates append their effective delta —
+  fsync'd, CRC-framed — *before* the barrier swap, so
+  ``QueryServer.recover(dir)`` after a crash replays snapshot + log into
+  a state bit-identical to a rebuild of the final graph.  Transient
+  update failures get bounded retry-with-backoff; exhausted retries
+  raise ``UpdateFailed`` and flip ``ServeStats.degraded`` while reads
+  keep being answered from the last-good index.  ``compact_every``
+  checkpoints periodically, truncating the log.
+
+``ServeStats.applied_lsn`` exposes the served index's log position for
+replica routing.
 
 ``repro.core.engine.jit_cache_entries`` counts compiled variants across
 the whole hot path; the serving benchmark asserts its delta over the
@@ -56,6 +69,8 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
+import os
+import re
 import threading
 import time
 from concurrent.futures import Future
@@ -63,14 +78,42 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core import deltalog as deltalog_mod
 from repro.core import engine as engine_mod
 from repro.core import graph as graph_mod
 from repro.core import pattern as pat
+from repro.core import snapshot as snapshot_mod
 from repro.core import tdr_build, tdr_query
+
+LOG_NAME = "deltas.wal"
+_SNAP_RE = re.compile(r"snapshot-(\d+)\.tdr")
 
 
 class QueueFull(RuntimeError):
     """Admission control: the server's request queue is at ``max_queue``."""
+
+
+class UpdateFailed(RuntimeError):
+    """An update exhausted its retries (or its barrier died) without
+    applying: the server keeps answering reads against the last-good
+    index in degraded mode (``ServeStats.degraded``)."""
+
+
+class RecoveryError(RuntimeError):
+    """``QueryServer.recover`` could not reconstruct a served index from
+    the persist directory (no usable snapshot, or the delta log was
+    compacted past every snapshot that validates)."""
+
+
+def _snapshot_files(directory: str) -> list[tuple[int, str]]:
+    """``(lsn, path)`` of every snapshot in ``directory``, ascending."""
+    out = []
+    for name in os.listdir(directory):
+        m = _SNAP_RE.fullmatch(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    out.sort()
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +131,13 @@ class ServeConfig:
     # dirty-set fraction beyond which submit_update falls back to a full
     # (layout-pinned) rebuild — see tdr_build.update_index
     update_rebuild_threshold: float = 0.5
+    # durability (active once persist_to/recover attaches a directory):
+    # snapshot + compact the delta log every N applied updates (0 = only
+    # on explicit checkpoint()); bounded retry-with-backoff for
+    # transient update/log failures before declaring the update failed
+    compact_every: int = 0
+    update_retries: int = 2
+    retry_backoff_s: float = 0.05
 
 
 @dataclasses.dataclass
@@ -105,6 +155,16 @@ class ServeStats:
     # more DNF terms than max_jobs is still served, alone, but may
     # compile a fresh bucket — visible here, not silently)
     overflow_batches: int = 0
+    # durability: highest LSN whose update the served index reflects
+    # (replica routing reads this), whether the last update failed and
+    # reads are being answered from the last-good index, and the
+    # retry/checkpoint bookkeeping behind those two
+    applied_lsn: int = 0
+    degraded: bool = False
+    update_failures: int = 0
+    update_retries: int = 0
+    snapshots: int = 0
+    checkpoint_failures: int = 0
     query_stats: "tdr_query.QueryStats" = dataclasses.field(
         default_factory=tdr_query.QueryStats)
 
@@ -129,11 +189,15 @@ class _Request:
 class _UpdateBarrier:
     """Queue sentinel carrying a pre-built index: the scheduler serves
     everything queued ahead of it on the old index, then swaps and clears
-    the result cache — the quiesce point of ``submit_update``."""
-    __slots__ = ("index", "event", "exc")
+    the result cache — the quiesce point of ``submit_update``.  ``lsn``
+    is the write-ahead log position of the update (None when persistence
+    is off); the scheduler refuses a swap that would move ``applied_lsn``
+    backwards."""
+    __slots__ = ("index", "lsn", "event", "exc")
 
-    def __init__(self, index):
+    def __init__(self, index, lsn=None):
         self.index = index
+        self.lsn = lsn
         self.event = threading.Event()
         self.exc: BaseException | None = None
 
@@ -192,6 +256,10 @@ class QueryServer:
         self._pin_m: int | None = None
         self._special: tuple[int, ...] | None = None
         self._warmed_to = 0
+        # durability state — attached by persist_to()/recover()
+        self._log: "deltalog_mod.DeltaLog | None" = None
+        self._persist_dir: str | None = None
+        self._updates_since_snap = 0
 
     def memory_stats(self) -> dict:
         """Resident index footprint: per-plane dense vs compressed bytes
@@ -313,21 +381,52 @@ class QueryServer:
         applies inline; with requests already queued it raises instead —
         those requests are owed pre-update answers and there is no
         scheduler to quiesce.  On timeout the barrier is withdrawn (the
-        update provably did not and will not apply) unless the scheduler
-        already holds it, in which case the imminent swap is waited
-        out."""
+        update provably did not and will not apply — including its log
+        record, which is popped) unless the scheduler already holds it,
+        in which case the imminent swap is waited out.
+
+        With persistence attached (``persist_to``/``recover``) the
+        effective delta is appended to the write-ahead log *before* the
+        barrier swap, so an acked update is always recoverable; index
+        maintenance and the log append each get
+        ``ServeConfig.update_retries`` retries with exponential backoff,
+        and exhausting them raises ``UpdateFailed`` while the server
+        keeps answering reads on the last-good index
+        (``ServeStats.degraded``)."""
+        cfg = self.config
         st = tdr_build.UpdateStats()
         with self._update_lock:
             # self.index is stable here: it only changes at *our* barrier
             delta = self.index.graph.apply_updates(edges_added,
                                                    edges_removed)
-            new_idx = tdr_build.update_index(
-                self.index, delta, backend=self.config.backend,
-                rebuild_threshold=(
-                    self.config.update_rebuild_threshold
-                    if rebuild_threshold is None else rebuild_threshold),
-                stats=st)
-            bar = _UpdateBarrier(new_idx)
+            lsn = None
+            try:
+                new_idx = self._with_retries(
+                    lambda: tdr_build.update_index(
+                        self.index, delta, backend=cfg.backend,
+                        rebuild_threshold=(
+                            cfg.update_rebuild_threshold
+                            if rebuild_threshold is None
+                            else rebuild_threshold),
+                        stats=st))
+                if self._log is not None:
+                    # write-ahead ordering: the delta is durable before
+                    # any served state can change (a crash between here
+                    # and the swap replays it on recovery — the acked-
+                    # or-acked-plus-one invariant)
+                    lsn = self._with_retries(
+                        lambda: self._log.append(delta.added,
+                                                 delta.removed))
+            except Exception as exc:
+                with self._lock:
+                    self.stats.degraded = True
+                    self.stats.update_failures += 1
+                raise UpdateFailed(
+                    f"update failed after {cfg.update_retries + 1} "
+                    "attempts; serving continues on the last-good "
+                    "index") from exc
+            bar = _UpdateBarrier(new_idx, lsn)
+            inline = False
             with self._lock:
                 if self._thread is None:
                     if self._queue:
@@ -335,16 +434,22 @@ class QueryServer:
                         # see the pre-update graph (the documented
                         # ordering), and with no scheduler there is
                         # nothing to quiesce them against
+                        if lsn is not None:
+                            self._log.pop_tail(lsn)
                         raise RuntimeError(
                             "submit_update on a stopped QueryServer with "
                             "queued requests; start() it first")
                     # idle stopped server: swap inline
                     self.index = new_idx
                     self._results.clear()
-                    self.stats.updates += 1
-                    return st
-                self._queue.append(bar)
-                self._not_empty.notify()
+                    self._note_applied(lsn)
+                    inline = True
+                else:
+                    self._queue.append(bar)
+                    self._not_empty.notify()
+            if inline:
+                self._maybe_compact()
+                return st
             if not bar.event.wait(timeout):
                 # withdraw the barrier if it is still queued — leaving it
                 # behind would let a *later* update (built from the
@@ -354,9 +459,18 @@ class QueryServer:
                     try:
                         self._queue.remove(bar)
                         withdrawn = True
+                        # the barrier held a max_queue slot: wake any
+                        # submit blocked on backpressure, or it stalls
+                        # until the next unrelated dequeue
+                        self._not_full.notify_all()
                     except ValueError:
                         withdrawn = False   # already popped by scheduler
                 if withdrawn:
+                    if lsn is not None:
+                        # under _update_lock no later append exists, so
+                        # the record is provably the log tail — recovery
+                        # must not replay an update that never applied
+                        self._log.pop_tail(lsn)
                     raise TimeoutError(
                         f"update barrier not reached within {timeout}s; "
                         "update withdrawn")
@@ -364,10 +478,187 @@ class QueryServer:
                 # out so the update's effects are never in doubt
                 bar.event.wait()
             if bar.exc is not None:
+                # the scheduler refused the swap (or died holding the
+                # barrier): roll the write-ahead record back so the log
+                # never runs ahead of an update that was not applied
+                if lsn is not None:
+                    try:
+                        self._log.pop_tail(lsn)
+                    except Exception:
+                        pass
+                with self._lock:
+                    self.stats.degraded = True
+                    self.stats.update_failures += 1
                 raise bar.exc
             with self._lock:
-                self.stats.updates += 1
+                self._note_applied(lsn)
+            self._maybe_compact()
         return st
+
+    def _with_retries(self, fn):
+        """Run ``fn`` with ``ServeConfig.update_retries`` bounded retries
+        and exponential backoff — transient maintenance/I/O failures
+        (e.g. a momentarily full disk) don't immediately degrade."""
+        cfg = self.config
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except Exception:
+                if attempt >= cfg.update_retries:
+                    raise
+                with self._lock:
+                    self.stats.update_retries += 1
+                time.sleep(cfg.retry_backoff_s * (2.0 ** attempt))
+                attempt += 1
+
+    def _note_applied(self, lsn: int | None) -> None:
+        """Bookkeeping for a successfully applied update (caller holds
+        ``_lock``): a success always clears degraded mode."""
+        self.stats.updates += 1
+        self.stats.degraded = False
+        if lsn is not None:
+            self.stats.applied_lsn = lsn
+
+    # ----------------------------------------------------------- durability
+    def persist_to(self, directory: str) -> int:
+        """Enable durability: checkpoint the current index into
+        ``directory`` and attach the write-ahead delta log.
+
+        Writes ``snapshot-<lsn>.tdr`` (see ``repro.core.snapshot``) and
+        opens/creates ``deltas.wal``; every subsequent ``submit_update``
+        appends its effective delta to the log *before* the index swap,
+        so ``QueryServer.recover(directory)`` reconstructs the served
+        state after a crash.  Existing log records (from a prior run of
+        this same server) are folded into the snapshot and compacted
+        away.  Returns the snapshot's LSN."""
+        with self._update_lock:
+            if self._log is not None:
+                raise RuntimeError(
+                    f"persistence already attached to {self._persist_dir}")
+            os.makedirs(directory, exist_ok=True)
+            log = deltalog_mod.DeltaLog(os.path.join(directory, LOG_NAME))
+            self._log = log
+            self._persist_dir = directory
+            with self._lock:
+                # the live index reflects everything this server has
+                # applied; pin the snapshot at the log head
+                self.stats.applied_lsn = log.last_lsn
+            return self._checkpoint_locked()
+
+    @classmethod
+    def recover(cls, directory: str, config: ServeConfig | None = None,
+                **overrides) -> "QueryServer":
+        """Reconstruct a server from a persist directory after a crash:
+        load the newest snapshot that validates, replay delta-log records
+        with LSN beyond it through ``tdr_build.update_index`` (bit-
+        identical to a layout-pinned rebuild of the final graph), and
+        return a stopped server with persistence attached — ``start()``
+        it to serve.  Falls back to older snapshots on ``SnapshotError``;
+        raises ``RecoveryError`` when no snapshot can bridge to the
+        (possibly compacted) log, and ``deltalog.LogCorrupt`` when the
+        log itself fails validation."""
+        cfg = config or ServeConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        snaps = _snapshot_files(directory) if os.path.isdir(directory) \
+            else []
+        if not snaps:
+            raise RecoveryError(f"no snapshots in {directory!r}")
+        log = deltalog_mod.DeltaLog(os.path.join(directory, LOG_NAME))
+        try:
+            idx = None
+            problems = []
+            for _, path in reversed(snaps):   # newest first
+                try:
+                    idx, snap_lsn = snapshot_mod.load_index(path)
+                except snapshot_mod.SnapshotError as exc:
+                    problems.append(f"{os.path.basename(path)}: {exc}")
+                    continue
+                if snap_lsn < log.base_lsn:
+                    # the log was compacted past this snapshot — records
+                    # it needs no longer exist, it cannot seed a replay
+                    problems.append(
+                        f"{os.path.basename(path)}: snapshot lsn "
+                        f"{snap_lsn} predates compacted log base "
+                        f"{log.base_lsn}")
+                    idx = None
+                    continue
+                break
+            if idx is None:
+                raise RecoveryError(
+                    "no usable snapshot: " + "; ".join(problems))
+            applied = snap_lsn
+            for lsn, added, removed in log.replay(after_lsn=snap_lsn):
+                delta = idx.graph.apply_updates(added, removed)
+                idx = tdr_build.update_index(
+                    idx, delta, backend=cfg.backend,
+                    rebuild_threshold=cfg.update_rebuild_threshold)
+                applied = lsn
+        except BaseException:
+            log.close()
+            raise
+        server = cls(idx, cfg)
+        server._log = log
+        server._persist_dir = directory
+        server.stats.applied_lsn = applied
+        return server
+
+    def checkpoint(self) -> int:
+        """Snapshot the currently served index and compact the delta log
+        (records the snapshot folds in are dropped; the previous
+        snapshot is retained as a corruption fallback).  Returns the
+        snapshot's LSN."""
+        with self._update_lock:
+            if self._log is None:
+                raise RuntimeError(
+                    "persistence is not attached; call persist_to() first")
+            return self._checkpoint_locked()
+
+    def close_persistence(self) -> None:
+        """Detach the delta log (closing its file handle); later updates
+        are no longer write-ahead logged."""
+        with self._update_lock:
+            if self._log is not None:
+                self._log.close()
+                self._log = None
+                self._persist_dir = None
+
+    def _checkpoint_locked(self) -> int:
+        """Checkpoint under ``_update_lock``: ``self.index`` cannot swap
+        while held, so index and ``applied_lsn`` are a consistent pair."""
+        with self._lock:
+            idx, lsn = self.index, self.stats.applied_lsn
+        path = os.path.join(self._persist_dir, f"snapshot-{lsn:016d}.tdr")
+        snapshot_mod.save_index(idx, path, lsn=lsn)
+        with self._lock:
+            self.stats.snapshots += 1
+        self._updates_since_snap = 0
+        # keep the two newest snapshots (fallback if the newest ever
+        # fails validation) and drop log records both have folded in
+        snaps = _snapshot_files(self._persist_dir)
+        for _, old in snaps[:-2]:
+            os.unlink(old)
+        self._log.truncate_upto(snaps[-2:][0][0])
+        return lsn
+
+    def _maybe_compact(self) -> None:
+        """Periodic checkpoint driver (holds ``_update_lock``): every
+        ``compact_every`` applied updates.  A failed checkpoint never
+        fails the update that triggered it — the update is already
+        durable in the log — it only defers compaction."""
+        if self._log is None:
+            return
+        self._updates_since_snap += 1
+        every = self.config.compact_every
+        if not every or self._updates_since_snap < every:
+            return
+        try:
+            self._checkpoint_locked()
+        except Exception:
+            with self._lock:
+                self.stats.checkpoint_failures += 1
+            self._updates_since_snap = every   # retry on the next update
 
     # --------------------------------------------------------------- warmup
     def warmup(self, sample: Sequence[tuple[int, int, pat.Pattern]],
@@ -431,10 +722,23 @@ class QueryServer:
                 return
             if isinstance(batch, _UpdateBarrier):
                 # quiesce point: every pre-update batch has been served
-                # by this thread already — swap and invalidate
+                # by this thread already — swap and invalidate.  The
+                # monotonic-LSN check is defense in depth: updates are
+                # serialized and barriers FIFO, so a regressing LSN here
+                # means a withdrawn barrier leaked back in — refuse the
+                # swap rather than serve a stale index as current.
                 with self._lock:
-                    self.index = batch.index
-                    self._results.clear()
+                    if batch.lsn is not None and \
+                            batch.lsn <= self.stats.applied_lsn:
+                        batch.exc = RuntimeError(
+                            f"update barrier lsn {batch.lsn} <= applied "
+                            f"lsn {self.stats.applied_lsn}: out-of-order "
+                            "swap refused")
+                    else:
+                        self.index = batch.index
+                        self._results.clear()
+                        if batch.lsn is not None:
+                            self.stats.applied_lsn = batch.lsn
                 batch.event.set()
                 continue
             if batch:

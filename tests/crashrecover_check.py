@@ -1,0 +1,152 @@
+"""Standalone kill-and-recover smoke (NOT collected by pytest directly —
+``tests/test_recovery.py`` spawns it as a slow test, and the CI recovery
+job runs it as its own leg).
+
+A worker subprocess builds a TDR index, attaches persistence
+(``QueryServer.persist_to``), and applies a *deterministic* stream of
+logged updates, printing the LSN it acked after each one.  The parent
+SIGKILLs it mid-stream — a real process death, no in-process cleanup of
+any kind — then recovers from the persist directory and asserts:
+
+* the recovered graph is exactly the deterministic graph after
+  ``applied_lsn`` updates — the acked prefix (the kill may or may not
+  have let one in-flight append land; both are valid prefixes);
+* every index plane is bit-identical to a from-scratch layout-pinned
+  ``build_index`` on that graph;
+* PCR answers on the recovered index match the DFS oracle.
+
+Run directly (both backends)::
+
+    PYTHONPATH=src python tests/crashrecover_check.py
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import numpy as np  # noqa: E402
+
+from repro.core import dfs_baseline, graph as G  # noqa: E402
+from repro.core import pattern as pat, tdr_build, tdr_query  # noqa: E402
+from repro.launch import serve  # noqa: E402
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+N_V, N_L, N_STEPS = 24, 4, 40
+KILL_AFTER_LSN = 3          # let a few updates ack before the SIGKILL
+
+PLANES = ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in", "push",
+          "pop", "g_count", "base_v", "base_l", "base_r", "r_vtx",
+          "r_lab", "r_in", "d_vtx", "d_lab")
+
+
+def make_plan(seed: int):
+    """Deterministic update stream: ``(g0, [graph after step 1..N],
+    [(add, rem), ...])`` — identical in parent and worker."""
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    graphs, steps = [g], []
+    for _ in range(N_STEPS):
+        cur = graphs[-1]
+        edges = list(zip(cur.src.tolist(), cur.indices.tolist(),
+                         cur.labels.tolist()))
+        add, rem = [], []
+        for _ in range(int(rng.integers(1, 4))):
+            kind = int(rng.integers(3))
+            if kind <= 1 or not edges:
+                u, v = int(rng.integers(N_V)), int(rng.integers(N_V))
+                if u != v:
+                    add.append((u, v, int(rng.integers(N_L))))
+            else:
+                rem.append(edges[int(rng.integers(len(edges)))])
+        steps.append((add, rem))
+        graphs.append(cur.apply_updates(add, rem).graph)
+    return graphs, steps
+
+
+def worker(directory: str, seed: int, backend: str) -> None:
+    graphs, steps = make_plan(seed)
+    idx = tdr_build.build_index(graphs[0], CFG, backend=backend)
+    srv = serve.QueryServer(idx, backend=backend, compact_every=3)
+    srv.persist_to(directory)
+    print("READY", flush=True)
+    for add, rem in steps:
+        srv.submit_update(add, rem)
+        print(f"LSN {srv.stats.applied_lsn}", flush=True)
+    print("DONE", flush=True)   # the parent should have killed us by now
+
+
+def run_one(backend: str, workdir: str, seed: int) -> None:
+    d = os.path.join(workdir, f"crash-{backend}")
+    here = os.path.abspath(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(here)), "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, here, "--worker", d, str(seed), backend],
+        env=env, stdout=subprocess.PIPE, text=True)
+    killed = False
+    deadline = time.monotonic() + 600
+    for line in proc.stdout:
+        line = line.strip()
+        if line.startswith("LSN") and \
+                int(line.split()[1]) >= KILL_AFTER_LSN:
+            # SIGKILL: no atexit, no finally, no flush — the on-disk
+            # state is whatever the fsyncs made durable
+            proc.send_signal(signal.SIGKILL)
+            killed = True
+            break
+        if line == "DONE" or time.monotonic() > deadline:
+            break
+    proc.wait(timeout=60)
+    assert killed, f"worker finished before the kill ({backend})"
+
+    graphs, _ = make_plan(seed)
+    rec = serve.QueryServer.recover(d, backend=backend)
+    try:
+        k = rec.stats.applied_lsn
+        assert k >= KILL_AFTER_LSN, f"lost acked updates: lsn={k}"
+        ref_g = graphs[k]
+        assert np.array_equal(rec.index.graph.indices, ref_g.indices)
+        assert np.array_equal(rec.index.graph.labels, ref_g.labels)
+        idx0 = tdr_build.build_index(graphs[0], CFG, backend=backend)
+        ref = tdr_build.build_index(ref_g, CFG, layout=idx0.disc,
+                                    backend=backend)
+        for p in PLANES:
+            x = np.asarray(getattr(rec.index, p))
+            y = np.asarray(getattr(ref, p))
+            assert np.array_equal(x, y), f"{backend}: plane {p} differs"
+        rng = np.random.default_rng(seed + 2)
+        qs = []
+        for i in range(8):
+            u, v = int(rng.integers(N_V)), int(rng.integers(N_V))
+            labs = rng.choice(N_L, size=2, replace=False).tolist()
+            qs.append((u, v, [pat.all_of(labs), pat.any_of(labs),
+                              pat.none_of(labs)][i % 3]))
+        got = tdr_query.answer_batch(rec.index, qs, backend=backend)
+        want = [dfs_baseline.answer_pcr(ref_g, u, v, p) for u, v, p in qs]
+        assert got.tolist() == want, f"{backend}: oracle mismatch"
+    finally:
+        rec.close_persistence()
+    print(f"[crashrecover] {backend}: killed at lsn>={KILL_AFTER_LSN}, "
+          f"recovered lsn={k}, planes + oracle OK")
+
+
+def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        worker(sys.argv[2], int(sys.argv[3]), sys.argv[4])
+        return
+    import tempfile
+    backends = sys.argv[1:] or ["segment", "pallas"]
+    with tempfile.TemporaryDirectory() as workdir:
+        for backend in backends:
+            run_one(backend, workdir, seed=12)
+    print("crashrecover check OK")
+
+
+if __name__ == "__main__":
+    main()

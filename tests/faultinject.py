@@ -1,0 +1,189 @@
+"""Deterministic I/O fault injection for the durability stack.
+
+``repro.core.snapshot`` and ``repro.core.deltalog`` route every file
+open and fsync through module-level ``_OPEN``/``_FSYNC`` seams; this
+harness patches both modules at once and counts *mutating* I/O
+operations (write / fsync / truncate) across them, firing one planned
+fault on the Nth such call:
+
+* ``kind="fail"`` — the Nth op raises ``OSError`` once; every later op
+  succeeds.  Models a transient failure the bounded retry in
+  ``QueryServer.submit_update`` should absorb.
+* ``kind="kill"`` — the Nth write persists only a prefix of its buffer
+  (``partial_frac``) and then *every* subsequent seamed op raises
+  ``SimulatedCrash``.  Models the process dying mid-I/O: rollback paths
+  cannot run against the dead "disk", so torn bytes stay on disk exactly
+  as a real crash would leave them.  Recovery happens after the
+  ``inject`` context exits, against the real filesystem.
+* ``kind="corrupt"`` — the Nth *write* flips one byte of its buffer and
+  then succeeds, silently.  Models bit rot that only checksums can
+  catch.  (Only writes are counted for this kind; a corrupted fsync is
+  not a thing.)
+* ``kind="count"`` — no fault; ``plan.count`` after the run tells a
+  sweep how many boundaries there are to kill at.
+
+Usage::
+
+    plan = FaultPlan(nth=3, kind="kill")
+    with inject(plan):
+        ...   # the 3rd mutating I/O call dies mid-write
+    assert plan.fired
+    server = QueryServer.recover(persist_dir)   # real I/O again
+
+Only files opened *through the seams while the context is active* are
+wrapped; handles opened before (or after) the context behave normally,
+which is what lets a "healed" server resume appending to the same log
+after a transient fault test.
+"""
+import contextlib
+import os
+
+from repro.core import deltalog, snapshot
+
+_MODULES = (snapshot, deltalog)
+
+
+class SimulatedCrash(OSError):
+    """The injected crash point was reached; everything after it is the
+    process being dead — no seamed I/O succeeds again until the
+    ``inject`` context exits."""
+
+
+class FaultPlan:
+    KINDS = ("count", "fail", "kill", "corrupt")
+
+    def __init__(self, nth: int = 0, kind: str = "count", *,
+                 partial_frac: float = 0.5, flip_byte: int = 0xFF):
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        self.nth = int(nth)
+        self.kind = kind
+        self.partial_frac = partial_frac
+        self.flip_byte = flip_byte
+        self.count = 0           # mutating ops seen so far
+        self.fired = False       # the planned fault has triggered
+
+    # -- internal hooks ------------------------------------------------
+    @property
+    def dead(self) -> bool:
+        return self.kind == "kill" and self.fired
+
+    def _tick(self, is_write: bool) -> bool:
+        """Count one mutating op; True iff it is the one to fault."""
+        if self.kind == "corrupt" and not is_write:
+            return False
+        self.count += 1
+        if self.kind != "count" and self.nth and self.count == self.nth:
+            self.fired = True
+            return True
+        return False
+
+
+class _FaultyFile:
+    """Proxy over a real file object applying ``FaultPlan`` to mutating
+    calls (write/truncate; fsync is seamed separately).  Reads pass
+    through — until the plan is dead, at which point *everything*
+    raises."""
+
+    def __init__(self, f, plan: FaultPlan):
+        self._f = f
+        self._plan = plan
+
+    def _check_dead(self):
+        if self._plan.dead:
+            raise SimulatedCrash("simulated crash: disk is gone")
+
+    def write(self, data):
+        self._check_dead()
+        if self._plan._tick(is_write=True):
+            kind = self._plan.kind
+            if kind == "fail":
+                raise OSError("injected transient write failure")
+            if kind == "kill":
+                keep = int(len(data) * self._plan.partial_frac)
+                self._f.write(data[:keep])
+                self._f.flush()   # the torn prefix reaches the "disk"
+                raise SimulatedCrash(
+                    f"simulated crash mid-write ({keep}/{len(data)} "
+                    "bytes persisted)")
+            if kind == "corrupt":
+                data = bytearray(data)
+                pos = len(data) // 2
+                data[pos] ^= self._plan.flip_byte or 0xFF
+                return self._f.write(bytes(data))
+        return self._f.write(data)
+
+    def truncate(self, size=None):
+        self._check_dead()
+        if self._plan._tick(is_write=False):
+            raise OSError("injected truncate failure")
+        return self._f.truncate(size)
+
+    def read(self, *a):
+        self._check_dead()
+        return self._f.read(*a)
+
+    def flush(self):
+        self._check_dead()
+        return self._f.flush()
+
+    def seek(self, *a):
+        self._check_dead()
+        return self._f.seek(*a)
+
+    def tell(self):
+        return self._f.tell()
+
+    def fileno(self):
+        return self._f.fileno()
+
+    def close(self):
+        # closing a dead file is allowed (cleanup paths run in-process
+        # even though the simulated machine is gone)
+        return self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Patch the ``_OPEN``/``_FSYNC`` seams of every durability module
+    to run ``plan``; restore the real I/O functions on exit."""
+    saved = [(m, m._OPEN, m._FSYNC) for m in _MODULES]
+
+    def faulty_open(path, mode="r", *args, **kwargs):
+        if plan.dead:
+            raise SimulatedCrash("simulated crash: disk is gone")
+        return _FaultyFile(open(path, mode, *args, **kwargs), plan)
+
+    def faulty_fsync(fd):
+        if plan.dead:
+            raise SimulatedCrash("simulated crash: disk is gone")
+        if plan._tick(is_write=False):
+            if plan.kind == "kill":
+                raise SimulatedCrash("simulated crash at fsync")
+            raise OSError("injected transient fsync failure")
+        return os.fsync(fd)
+
+    for m in _MODULES:
+        m._OPEN, m._FSYNC = faulty_open, faulty_fsync
+    try:
+        yield plan
+    finally:
+        for m, o, s in saved:
+            m._OPEN, m._FSYNC = o, s
+
+
+def count_ops(fn) -> int:
+    """Run ``fn`` under a fault-free counting plan; returns how many
+    mutating I/O ops it performed — the sweep range for kill-at-every-
+    boundary tests."""
+    plan = FaultPlan(kind="count")
+    with inject(plan):
+        fn()
+    return plan.count

@@ -1,0 +1,631 @@
+"""Durability: snapshot/restore, write-ahead log, crash recovery.
+
+The contract under test, end to end: for **any** interleaving of
+build / update / crash — the crash injected at any mutating I/O
+boundary via ``tests/faultinject.py`` — recovery (newest valid snapshot
++ delta-log replay through ``update_index``) yields an index
+bit-identical to a from-scratch ``build_index`` on the graph as of the
+last acked update, or of the one in-flight update the crash interrupted
+(an fsync'd-but-unacked append may legitimately survive).  Nothing else
+is acceptable: a corrupted snapshot or log must raise its typed error
+(``SnapshotCorrupt``/``SnapshotVersionMismatch``/``LogCorrupt``) —
+never load garbage — and a faulted update must leave the server
+answering reads in degraded mode on the last-good index.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import faultinject
+from repro.core import deltalog, dfs_baseline, graph as G
+from repro.core import pattern as pat, snapshot, tdr_build, tdr_query
+from repro.launch import serve
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+
+PLANES = ("h_vtx", "h_lab", "v_vtx", "v_lab", "n_out", "n_in", "push",
+          "pop", "g_count", "base_v", "base_l", "base_r", "r_vtx",
+          "r_lab", "r_in", "d_vtx", "d_lab")
+
+# randomized build/update/crash interleavings per backend (105 total —
+# the acceptance floor is 100 across both)
+N_CRASH_TRIALS = {"segment": 70, "pallas": 35}
+N_V, N_L = 24, 4
+
+
+def assert_planes_equal(a, b, ctx=""):
+    for p in PLANES:
+        x, y = np.asarray(getattr(a, p)), np.asarray(getattr(b, p))
+        assert np.array_equal(x, y), \
+            f"{ctx}: plane {p} differs ({int((x != y).sum())} cells)"
+    assert np.array_equal(a.vtx_words, b.vtx_words), ctx
+    assert np.array_equal(np.asarray(a.disc), np.asarray(b.disc)), ctx
+
+
+def _random_step(rng, g):
+    """One random update batch: inserts, deletes, label changes."""
+    add, rem = [], []
+    edges = list(zip(g.src.tolist(), g.indices.tolist(),
+                     g.labels.tolist()))
+    for _ in range(int(rng.integers(1, 4))):
+        kind = int(rng.integers(4))
+        if kind <= 1 or not edges:
+            u, v = int(rng.integers(g.n_vertices)), \
+                int(rng.integers(g.n_vertices))
+            if u != v:
+                add.append((u, v, int(rng.integers(g.n_labels))))
+        elif kind == 2:
+            rem.append(edges[int(rng.integers(len(edges)))])
+        else:
+            u, v, l = edges[int(rng.integers(len(edges)))]
+            rem.append((u, v, l))
+            add.append((u, v, int((l + 1) % g.n_labels)))
+    return add, rem
+
+
+def _oracle_queries(rng, g, n=6):
+    qs = []
+    for i in range(n):
+        u, v = int(rng.integers(g.n_vertices)), \
+            int(rng.integers(g.n_vertices))
+        labs = rng.choice(g.n_labels, size=2, replace=False).tolist()
+        p = [pat.all_of(labs), pat.any_of(labs), pat.none_of(labs),
+             pat.parse(f"l{labs[0]} & !l{labs[1]}")][i % 4]
+        qs.append((u, v, p))
+    return qs
+
+
+def _check_oracle(idx, g, rng, backend):
+    qs = _oracle_queries(rng, g)
+    got = tdr_query.answer_batch(idx, qs, backend=backend)
+    want = [dfs_baseline.answer_pcr(g, u, v, p) for u, v, p in qs]
+    assert got.tolist() == want
+
+
+# ------------------------------------------------------------ snapshot
+@pytest.mark.parametrize("backend", ["segment", "pallas"])
+def test_snapshot_roundtrip_bit_identical(backend, tmp_path):
+    """save → load restores every plane, the frozen layout, and the
+    maintenance state: the restored index answers like the original and
+    chains ``update_index`` bit-identically to a layout-pinned rebuild."""
+    rng = np.random.default_rng(0)
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=0)
+    idx = tdr_build.build_index(g, CFG, backend=backend)
+    path = str(tmp_path / "snap.tdr")
+    n_bytes = snapshot.save_index(idx, path, lsn=17)
+    assert n_bytes == os.path.getsize(path)
+    assert snapshot.peek_lsn(path) == 17
+    idx2, lsn = snapshot.load_index(path)
+    assert lsn == 17
+    assert_planes_equal(idx, idx2, "roundtrip")
+    assert np.array_equal(idx.lab_slot, idx2.lab_slot)
+    # the compressed-plane cache is seeded from the validated sections
+    c1, c2 = idx.compressed_planes(), idx2.compressed_planes()
+    assert all(c1[k].same_as(c2[k]) for k in c1)
+    _check_oracle(idx2, g, rng, backend)
+    # restored index updates exactly like the one that was saved
+    add, rem = _random_step(rng, g)
+    delta = idx2.graph.apply_updates(add, rem)
+    upd = tdr_build.update_index(idx2, delta, backend=backend)
+    ref = tdr_build.build_index(delta.graph, CFG, layout=idx.disc,
+                                backend=backend)
+    assert_planes_equal(upd, ref, "update-after-restore")
+
+
+def test_snapshot_corruption_always_typed(tmp_path):
+    """Random byte flips and truncations anywhere in a snapshot raise a
+    typed ``SnapshotError`` — a damaged file is never loaded."""
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=1)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    path = str(tmp_path / "snap.tdr")
+    snapshot.save_index(idx, path, lsn=1)
+    orig = open(path, "rb").read()
+    rng = np.random.default_rng(2)
+    bad = str(tmp_path / "bad.tdr")
+    for trial in range(60):
+        data = bytearray(orig)
+        pos = int(rng.integers(len(data)))
+        data[pos] ^= int(rng.integers(1, 256))
+        with open(bad, "wb") as f:
+            f.write(bytes(data))
+        with pytest.raises(snapshot.SnapshotError):
+            snapshot.load_index(bad)
+    for trial in range(20):
+        cut = int(rng.integers(0, len(orig)))
+        with open(bad, "wb") as f:
+            f.write(orig[:cut])
+        with pytest.raises(snapshot.SnapshotError):
+            snapshot.load_index(bad)
+
+
+def test_snapshot_version_gate(tmp_path):
+    g = G.fig2_example()
+    idx = tdr_build.build_index(g, CFG)
+    path = str(tmp_path / "snap.tdr")
+    snapshot.save_index(idx, path)
+    data = bytearray(open(path, "rb").read())
+    # bump the container version word (little-endian u32 after magic)
+    data[len(snapshot.MAGIC)] = snapshot.VERSION + 1
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    with pytest.raises(snapshot.SnapshotVersionMismatch):
+        snapshot.load_index(path)
+
+
+# ----------------------------------------------------------- delta log
+def _three_record_log(path):
+    rng = np.random.default_rng(3)
+    log = deltalog.DeltaLog(path)
+    recs = []
+    for _ in range(3):
+        a = rng.integers(0, 20, size=(int(rng.integers(1, 4)), 3)
+                         ).astype(np.int64)
+        r = rng.integers(0, 20, size=(int(rng.integers(0, 2)), 3)
+                         ).astype(np.int64)
+        log.append(a, r)
+        recs.append((a, r))
+    log.close()
+    return recs
+
+
+def test_log_corruption_always_typed(tmp_path):
+    """Any byte flip in a complete log file raises ``LogCorrupt`` on
+    open; a truncation yields exactly the longest valid record prefix."""
+    path = str(tmp_path / "wal")
+    recs = _three_record_log(path)
+    orig = open(path, "rb").read()
+    rng = np.random.default_rng(4)
+    bad = str(tmp_path / "bad.wal")
+    for trial in range(60):
+        data = bytearray(orig)
+        pos = int(rng.integers(len(data)))
+        data[pos] ^= int(rng.integers(1, 256))
+        with open(bad, "wb") as f:
+            f.write(bytes(data))
+        with pytest.raises(deltalog.LogCorrupt):
+            deltalog.DeltaLog(bad)
+
+    hdr_len = len(deltalog.FILE_MAGIC) + deltalog._FHEAD.size
+    # record boundaries in the pristine file
+    probe = deltalog.DeltaLog(path)
+    bounds = [r.offset for r in probe.records] + [len(orig)]
+    probe.close()
+    for trial in range(20):
+        cut = int(rng.integers(0, len(orig)))
+        with open(bad, "wb") as f:
+            f.write(orig[:cut])
+        if cut < hdr_len:
+            with pytest.raises(deltalog.LogCorrupt):
+                deltalog.DeltaLog(bad)
+            continue
+        log = deltalog.DeltaLog(bad)
+        survive = sum(1 for b in bounds[1:] if b <= cut)
+        got = list(log.replay(0))
+        assert len(got) == survive
+        for (lsn, a, r), (ea, er) in zip(got, recs):
+            assert np.array_equal(a, ea) and np.array_equal(r, er)
+        log.close()
+
+
+def test_log_torn_tail_truncated_prior_replay(tmp_path):
+    """A torn final record (crash mid-append) is cut on open; every
+    prior record replays; appends resume at the right LSN."""
+    path = str(tmp_path / "wal")
+    recs = _three_record_log(path)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 5)   # tear into record 3
+    log = deltalog.DeltaLog(path)
+    assert log.truncated_bytes > 0
+    assert [lsn for lsn, _, _ in log.replay(0)] == [1, 2]
+    assert log.last_lsn == 2
+    assert log.append(recs[2][0], recs[2][1]) == 3
+    log.close()
+    # the re-appended log is fully valid again
+    log = deltalog.DeltaLog(path)
+    assert log.truncated_bytes == 0 and log.last_lsn == 3
+    log.close()
+
+
+def test_log_compaction_preserves_position(tmp_path):
+    """truncate_upto drops folded records but the base LSN survives a
+    reopen — a fully compacted log still knows where the sequence is."""
+    path = str(tmp_path / "wal")
+    _three_record_log(path)
+    log = deltalog.DeltaLog(path)
+    assert log.truncate_upto(3) == 3
+    assert log.base_lsn == 3 and len(log) == 0
+    log.close()
+    log = deltalog.DeltaLog(path)
+    assert log.base_lsn == 3 and log.last_lsn == 3
+    assert log.append(np.zeros((1, 3), np.int64),
+                      np.zeros((0, 3), np.int64)) == 4
+    log.close()
+
+
+# ------------------------------------------------- crash interleavings
+def _run_crash_trial(backend, trial, workdir):
+    """One randomized build/update/crash interleaving; returns True if
+    the injected fault actually fired."""
+    rng = np.random.default_rng(7000 + trial)
+    g = G.random_graph(["er", "pa"][trial % 2], N_V, 2.0, N_L, seed=trial)
+    idx = tdr_build.build_index(g, CFG, backend=backend)
+    d = os.path.join(workdir, f"t{trial}")
+    srv = serve.QueryServer(
+        idx, backend=backend, update_retries=0,
+        compact_every=int(rng.integers(0, 3)))
+
+    graphs = [g]                 # graph after each *attempted* update
+    acked = 0
+    persist_ok = False
+    plan = faultinject.FaultPlan(nth=int(rng.integers(1, 15)),
+                                 kind="kill")
+    with faultinject.inject(plan):
+        try:
+            srv.persist_to(d)
+            persist_ok = True
+            for step in range(int(rng.integers(1, 5))):
+                add, rem = _random_step(rng, graphs[-1])
+                cand = graphs[-1].apply_updates(add, rem).graph
+                graphs.append(cand)
+                srv.submit_update(add, rem)
+                acked += 1
+        except (serve.UpdateFailed, OSError):
+            pass
+    srv.close_persistence()
+
+    if not persist_ok:
+        # crash during the initial checkpoint: either nothing durable
+        # exists yet (typed refusal) or the snapshot landed just before
+        # the crash (e.g. at the directory fsync) and recovery yields
+        # exactly the initial graph — never anything in between
+        try:
+            rec = serve.QueryServer.recover(d, backend=backend)
+        except (serve.RecoveryError, deltalog.LogCorrupt):
+            return plan.fired
+        try:
+            ref = tdr_build.build_index(g, CFG, layout=idx.disc,
+                                        backend=backend)
+            assert_planes_equal(rec.index, ref,
+                                f"trial {trial} (persist crash)")
+        finally:
+            rec.close_persistence()
+        return plan.fired
+
+    rec = serve.QueryServer.recover(d, backend=backend)
+    try:
+        # acked state always survives; the one in-flight update may too
+        # (its append can be durable before the ack) — nothing else
+        allowed = {acked}
+        if plan.fired and len(graphs) > acked + 1:
+            allowed.add(acked + 1)
+        match = None
+        for k in sorted(allowed):
+            if rec.index.graph.n_edges == graphs[k].n_edges and \
+                    np.array_equal(rec.index.graph.indices,
+                                   graphs[k].indices) and \
+                    np.array_equal(rec.index.graph.labels,
+                                   graphs[k].labels):
+                match = k
+                break
+        assert match is not None, \
+            f"trial {trial}: recovered graph is none of {sorted(allowed)}"
+        ref = tdr_build.build_index(graphs[match], CFG, layout=idx.disc,
+                                    backend=backend)
+        assert_planes_equal(rec.index, ref,
+                            f"trial {trial} (k={match}, acked={acked})")
+        assert rec.stats.applied_lsn == match
+        if trial % 10 == 0:
+            _check_oracle(rec.index, graphs[match], rng, backend)
+    finally:
+        rec.close_persistence()
+    return plan.fired
+
+
+@pytest.mark.parametrize("backend", ["segment", "pallas"])
+def test_crash_interleavings_recover_bit_identical(backend, tmp_path):
+    fired = 0
+    n = N_CRASH_TRIALS[backend]
+    for trial in range(n):
+        fired += bool(_run_crash_trial(backend, trial, str(tmp_path)))
+    # the nth-op draw must actually be exercising crashes, not just
+    # running the clean path n times
+    assert fired > n // 3, f"only {fired}/{n} trials crashed"
+
+
+@pytest.mark.parametrize("backend", ["segment", "pallas"])
+def test_kill_at_every_io_boundary(backend, tmp_path):
+    """Deterministic sweep: the same persist + update + checkpoint
+    pipeline is killed at every mutating I/O call it makes; every
+    recovery lands on an acked (or acked+1) prefix, bit-identically."""
+    g = G.random_graph("er", 20, 2.0, N_L, seed=42)
+    idx = tdr_build.build_index(g, CFG, backend=backend)
+    rng = np.random.default_rng(43)
+    steps = [_random_step(rng, g) for _ in range(2)]
+
+    def scenario(d, plan):
+        srv = serve.QueryServer(idx, backend=backend, update_retries=0)
+        graphs, acked, persist_ok = [g], 0, False
+        with faultinject.inject(plan):
+            try:
+                srv.persist_to(d)
+                persist_ok = True
+                for add, rem in steps:
+                    graphs.append(
+                        graphs[-1].apply_updates(add, rem).graph)
+                    srv.submit_update(add, rem)
+                    acked += 1
+                srv.checkpoint()
+            except (serve.UpdateFailed, OSError):
+                pass
+        srv.close_persistence()
+        return graphs, acked, persist_ok
+
+    probe = faultinject.FaultPlan(kind="count")
+    scenario(str(tmp_path / "probe"), probe)
+    total = probe.count
+    assert total >= 6, f"scenario only made {total} I/O calls"
+
+    for nth in range(1, total + 1):
+        d = str(tmp_path / f"n{nth}")
+        plan = faultinject.FaultPlan(nth=nth, kind="kill")
+        graphs, acked, persist_ok = scenario(d, plan)
+        assert plan.fired, f"nth={nth} never fired (total={total})"
+        if not persist_ok:
+            try:
+                rec = serve.QueryServer.recover(d, backend=backend)
+            except (serve.RecoveryError, deltalog.LogCorrupt):
+                continue
+            try:
+                ref = tdr_build.build_index(g, CFG, layout=idx.disc,
+                                            backend=backend)
+                assert_planes_equal(rec.index, ref,
+                                    f"nth={nth} (persist crash)")
+            finally:
+                rec.close_persistence()
+            continue
+        rec = serve.QueryServer.recover(d, backend=backend)
+        try:
+            allowed = [acked] + \
+                ([acked + 1] if len(graphs) > acked + 1 else [])
+            match = next(
+                (k for k in allowed
+                 if np.array_equal(rec.index.graph.indices,
+                                   graphs[k].indices)
+                 and np.array_equal(rec.index.graph.labels,
+                                    graphs[k].labels)), None)
+            assert match is not None, f"nth={nth}: not a valid prefix"
+            ref = tdr_build.build_index(graphs[match], CFG,
+                                        layout=idx.disc, backend=backend)
+            assert_planes_equal(rec.index, ref, f"nth={nth}")
+        finally:
+            rec.close_persistence()
+
+
+# -------------------------------------------------- serving integration
+def test_transient_fault_absorbed_by_retry(tmp_path):
+    """A single transient I/O failure is retried away: the update acks,
+    nothing degrades, and the log position is exactly one ahead."""
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=5)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    srv = serve.QueryServer(idx, backend="segment", update_retries=2,
+                            retry_backoff_s=0.001)
+    srv.persist_to(str(tmp_path / "p"))
+    plan = faultinject.FaultPlan(nth=1, kind="fail")
+    with faultinject.inject(plan):
+        srv.submit_update([(0, 1, 0)], [])
+    assert plan.fired
+    assert srv.stats.update_retries >= 1
+    assert not srv.stats.degraded and srv.stats.update_failures == 0
+    assert srv.stats.applied_lsn == 1 and srv._log.last_lsn == 1
+    srv.close_persistence()
+
+
+def test_degraded_mode_keeps_serving_last_good(tmp_path):
+    """An update that exhausts its retries raises ``UpdateFailed`` and
+    flips degraded; reads keep answering correctly on the last-good
+    index; the next successful update clears degraded and recovery
+    agrees with the live server."""
+    rng = np.random.default_rng(6)
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=6)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    srv = serve.QueryServer(idx, backend="segment", update_retries=1,
+                            retry_backoff_s=0.001)
+    d = str(tmp_path / "p")
+    srv.persist_to(d)
+    with srv:
+        plan = faultinject.FaultPlan(nth=1, kind="kill")
+        with faultinject.inject(plan):
+            with pytest.raises(serve.UpdateFailed):
+                srv.submit_update([(0, 1, 0)], [])
+        assert srv.stats.degraded and srv.stats.update_failures == 1
+        # reads still served, and against the *pre-fault* graph
+        qs = _oracle_queries(rng, g)
+        got = [srv.submit(u, v, p).result(timeout=30) for u, v, p in qs]
+        assert got == [dfs_baseline.answer_pcr(g, u, v, p)
+                       for u, v, p in qs]
+        assert srv.stats.applied_lsn == 0
+        # healed: the next update applies and clears degraded
+        srv.submit_update([(0, 1, 0)], [])
+        assert not srv.stats.degraded
+        assert srv.stats.applied_lsn == 1
+        live = srv.index
+    srv.close_persistence()
+    rec = serve.QueryServer.recover(d, backend="segment")
+    assert_planes_equal(rec.index, live, "recover-after-degraded")
+    assert rec.stats.applied_lsn == 1
+    rec.close_persistence()
+
+
+def test_barrier_withdrawal_no_deadlock_no_reorder(tmp_path):
+    """Satellite regression: a timed-out (withdrawn) update barrier
+    must free its queue slot (unblocking backpressured submits), pop
+    its write-ahead record, and leave LSN order intact for the next
+    update.  A stale-LSN barrier smuggled into the queue is refused."""
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=8)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    srv = serve.QueryServer(idx, backend="segment", max_queue=4,
+                            max_wait_ms=0.5)
+    d = str(tmp_path / "p")
+    srv.persist_to(d)
+    gate = threading.Event()
+    orig_serve = srv._serve_batch
+
+    def gated(batch):
+        gate.wait(30)
+        return orig_serve(batch)
+
+    srv._serve_batch = gated
+    p0 = pat.any_of([0, 1])
+    with srv:
+        first = srv.submit(0, 1, p0)        # scheduler blocks in gated
+        for _ in range(100):
+            with srv._lock:
+                if not srv._queue:
+                    break
+            time.sleep(0.01)
+        upd_err: list = []
+
+        def slow_update():
+            try:
+                srv.submit_update([(2, 3, 1)], [], timeout=0.3)
+            except BaseException as e:   # noqa: BLE001
+                upd_err.append(e)
+
+        t_upd = threading.Thread(target=slow_update)
+        t_upd.start()
+        # wait for the barrier to occupy its queue slot
+        for _ in range(100):
+            with srv._lock:
+                if srv._queue:
+                    break
+            time.sleep(0.01)
+        # fill the queue to max_queue on top of the barrier
+        filled = 0
+        while True:
+            try:
+                srv.submit(filled % N_V, (filled + 1) % N_V, p0,
+                           block=False)
+                filled += 1
+            except serve.QueueFull:
+                break
+        assert filled == srv.config.max_queue - 1
+        # this submit must unblock when the barrier is withdrawn — the
+        # regression: a withdrawn barrier that never notified _not_full
+        # left it waiting for an unrelated dequeue
+        blocked_done = threading.Event()
+
+        def blocked_submit():
+            srv.submit(1, 2, p0, block=True, timeout=30)
+            blocked_done.set()
+
+        t_blk = threading.Thread(target=blocked_submit)
+        t_blk.start()
+        t_upd.join(timeout=30)
+        assert not t_upd.is_alive(), "submit_update deadlocked"
+        assert upd_err and isinstance(upd_err[0], TimeoutError)
+        # the write-ahead record of the withdrawn update was popped
+        assert srv._log.last_lsn == 0
+        blocked_done.wait(30)
+        assert blocked_done.is_set(), \
+            "backpressured submit deadlocked after withdrawal"
+        gate.set()
+        first.result(timeout=30)
+        # the next update reuses the freed LSN and applies in order
+        srv.submit_update([(2, 3, 1)], [], timeout=30)
+        assert srv.stats.applied_lsn == 1
+        # defense in depth: a stale-LSN barrier is refused, not swapped
+        stale = serve._UpdateBarrier(srv.index, lsn=srv.stats.applied_lsn)
+        with srv._lock:
+            srv._queue.append(stale)
+            srv._not_empty.notify()
+        assert stale.event.wait(30)
+        assert stale.exc is not None
+        live = srv.index
+    srv.close_persistence()
+    rec = serve.QueryServer.recover(d, backend="segment")
+    assert_planes_equal(rec.index, live, "recover-after-withdrawal")
+    rec.close_persistence()
+
+
+# ------------------------------------------------------------- recover
+def test_recover_falls_back_to_older_snapshot(tmp_path):
+    """Corrupting the newest snapshot falls recovery back to the
+    retained previous one + a longer replay; corrupting both refuses
+    with ``RecoveryError``."""
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=10)
+    idx = tdr_build.build_index(g, CFG, backend="segment")
+    srv = serve.QueryServer(idx, backend="segment")
+    d = str(tmp_path / "p")
+    srv.persist_to(d)
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        add, rem = _random_step(rng, srv.index.graph)
+        srv.submit_update(add, rem)
+    srv.checkpoint()   # retains snapshot lsn=0 and snapshot lsn=3
+    live = srv.index
+    srv.close_persistence()
+    snaps = serve._snapshot_files(d)
+    assert len(snaps) == 2
+    newest = snaps[-1][1]
+    data = bytearray(open(newest, "rb").read())
+    data[len(data) // 2] ^= 0x5A
+    with open(newest, "wb") as f:
+        f.write(bytes(data))
+    rec = serve.QueryServer.recover(d, backend="segment")
+    assert_planes_equal(rec.index, live, "fallback-snapshot")
+    assert rec.stats.applied_lsn == 3
+    rec.close_persistence()
+    oldest = snaps[0][1]
+    data = bytearray(open(oldest, "rb").read())
+    data[len(data) // 2] ^= 0x5A
+    with open(oldest, "wb") as f:
+        f.write(bytes(data))
+    with pytest.raises(serve.RecoveryError):
+        serve.QueryServer.recover(d, backend="segment")
+
+
+def test_recover_refuses_compaction_gap(tmp_path):
+    """A snapshot older than the log's compacted base cannot seed a
+    replay — typed refusal, not a silently wrong index."""
+    g = G.fig2_example()
+    idx = tdr_build.build_index(g, CFG)
+    d = tmp_path / "p"
+    d.mkdir()
+    snapshot.save_index(idx, str(d / "snapshot-0000000000000000.tdr"),
+                        lsn=0)
+    log = deltalog.DeltaLog(str(d / serve.LOG_NAME))
+    for _ in range(3):
+        log.append(np.array([[0, 1, 0]], np.int64),
+                   np.zeros((0, 3), np.int64))
+    log.truncate_upto(2)       # base_lsn=2 > snapshot lsn=0: gap
+    log.close()
+    with pytest.raises(serve.RecoveryError):
+        serve.QueryServer.recover(str(d))
+
+
+def test_recover_empty_dir(tmp_path):
+    with pytest.raises(serve.RecoveryError):
+        serve.QueryServer.recover(str(tmp_path / "nowhere"))
+
+
+@pytest.mark.slow
+def test_sigkill_subprocess_recovers():
+    """Real process death: ``tests/crashrecover_check.py`` SIGKILLs a
+    persisting worker mid-update-stream and recovers from whatever the
+    fsyncs made durable (also the CI recovery job's standalone leg)."""
+    import subprocess
+    import sys
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "crashrecover_check.py"),
+         "segment"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "crashrecover check OK" in r.stdout

@@ -1,14 +1,24 @@
-"""Packed-word OR-semiring closure engine — one core shared by build & query.
+"""Packed-word semiring closure engine — one core shared by build & query.
 
 Everything the TDR pipeline computes — index construction (§IV Alg. 1),
 vertical k-level propagation, and the query-side product-graph expansion
 (§V Alg. 2) — is one primitive applied in different shapes:
 
-    out[a] = OR_{(a,b) ∈ E} x[b]          (boolean-OR semiring propagate)
+    out[a] = (+)_{(a,b) ∈ E} extend(x[b])     (semiring propagate)
 
-This module provides that primitive **end-to-end on packed uint32 words**
-(32 graph bits per lane element; no ``[V, nbits]`` boolean plane at rest)
-behind a pluggable backend:
+The fixpoint/propagate cores are parameterized by a ``repro.core.semiring``
+instance (static under jit, so each algebra compiles its own
+specialization).  The default — and the only carrier the index planes
+use — is ``semiring.BOOLEAN``: packed uint32 words, (+) = OR, extend =
+identity, whose generic code path emits *exactly* the traced ops of the
+pre-refactor OR engine (bit-identity asserted in tests/test_semiring.py).
+``DIST16``/``DIST8`` (min-plus over saturating unsigned lanes) and
+``COUNT`` (saturating add, non-idempotent — ``closure`` refuses it) drive
+the witness/distance/route-count query kinds in ``tdr_query``.
+
+This module provides the primitive **end-to-end on packed uint32 words**
+for the boolean carrier (32 graph bits per lane element; no ``[V, nbits]``
+boolean plane at rest) behind a pluggable backend:
 
 * ``segment`` — reference backend; chunked ``segment_max`` over word-chunk
   transients (``bitset.segment_or_words``).  Works on any jax backend and
@@ -45,6 +55,7 @@ import numpy as np
 from . import bitset
 from .compressed import BlockCompressed, compress_blocks, patch_blocks
 from .graph import Graph, csr_row_edges, pad_bucket
+from .semiring import BOOLEAN, Semiring
 
 ENV_BACKEND = "REPRO_ENGINE_BACKEND"
 BACKENDS = ("segment", "pallas")
@@ -135,11 +146,16 @@ def pack_label_class_adjacency_np(graph: Graph, special_labels,
 
 # --------------------------------------------------------- jitted closures
 @functools.partial(jax.jit, static_argnames=("num_segments", "chunk_words",
-                                             "max_iters"))
+                                             "max_iters", "sr"))
 def _closure_segment(base: jax.Array, gather_idx: jax.Array,
                      scatter_idx: jax.Array, *, num_segments: int,
-                     chunk_words: int, max_iters: int):
-    """lfp(R = base ∨ OR_{(a,b)} R[b]) via packed segment reductions."""
+                     chunk_words: int, max_iters: int,
+                     sr: Semiring = BOOLEAN):
+    """lfp(R = base (+) A⊗R) via packed segment reductions.
+
+    ``sr`` is static: the boolean instantiation traces the exact
+    pre-refactor ops (``segment_or_words`` + the ``upd & ~r`` changed-flag
+    idiom live inside ``sr.segment_combine``/``sr.accumulate``)."""
 
     def cond(state):
         _, changed, it = state
@@ -147,11 +163,12 @@ def _closure_segment(base: jax.Array, gather_idx: jax.Array,
 
     def body(state):
         r, _, it = state
-        upd = bitset.segment_or_words(r[gather_idx], scatter_idx,
-                                      num_segments=num_segments,
-                                      chunk_words=chunk_words)
-        new = upd & ~r   # the changed flag falls out of the round's own OR
-        return r | new, jnp.any(new != 0), it + 1
+        upd = sr.segment_combine(sr.extend(r[gather_idx]), scatter_idx,
+                                 num_segments=num_segments,
+                                 chunk_words=chunk_words)
+        # boolean: the changed flag falls out of the round's own OR
+        r, changed = sr.accumulate(r, upd)
+        return r, changed, it + 1
 
     r, _, rounds = jax.lax.while_loop(cond, body,
                                       (base, jnp.bool_(True), jnp.int32(0)))
@@ -159,21 +176,28 @@ def _closure_segment(base: jax.Array, gather_idx: jax.Array,
 
 
 def _matmul_rows(adj: jax.Array, x: jax.Array, mode: str,
-                 tiles: tuple[int, int, int] | None = None) -> jax.Array:
-    """``OR_j adj[i,j] & x[j]`` with x's row count padded to adj's bit width
-    (the packed adjacency is word-aligned: K = ceil(V/32)*32 >= V)."""
+                 tiles: tuple[int, int, int] | None = None,
+                 sr: Semiring = BOOLEAN) -> jax.Array:
+    """``(+)_j adj[i,j] (x) x[j]`` with x's row count padded to adj's bit
+    width (the packed adjacency is word-aligned: K = ceil(V/32)*32 >= V;
+    pad rows carry no adjacency bits, so the pad value never selects)."""
     from repro.kernels import ops  # deferred: kernels import repro.core
     k = adj.shape[1] * bitset.WORD
     if x.shape[0] < k:
         x = jnp.concatenate(
             [x, jnp.zeros((k - x.shape[0],) + x.shape[1:], x.dtype)], axis=0)
-    return ops.frontier_step(adj, x, mode=mode, tiles=tiles)
+    if sr.packed:
+        return ops.frontier_step(adj, x, mode=mode, tiles=tiles)
+    return sr.extend(ops.frontier_step_lanes(adj, x, op=sr.op, cap=sr.cap,
+                                             mode=mode, tiles=tiles))
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "mode"))
+@functools.partial(jax.jit, static_argnames=("max_iters", "mode", "sr"))
 def _closure_matmul(base: jax.Array, adj: jax.Array, *, max_iters: int,
-                    mode: str):
-    """Same fixpoint with rounds routed through ``kernels.bitset_matmul``."""
+                    mode: str, sr: Semiring = BOOLEAN):
+    """Same fixpoint with rounds routed through the Pallas kernels
+    (``bitset_matmul`` for the packed boolean carrier, ``lane_matmul``
+    for lane carriers)."""
 
     def cond(state):
         _, changed, it = state
@@ -181,9 +205,10 @@ def _closure_matmul(base: jax.Array, adj: jax.Array, *, max_iters: int,
 
     def body(state):
         r, _, it = state
-        upd = _matmul_rows(adj, r, mode)
-        new = upd & ~r   # the changed flag falls out of the round's own OR
-        return r | new, jnp.any(new != 0), it + 1
+        upd = _matmul_rows(adj, r, mode, sr=sr)
+        # boolean: the changed flag falls out of the round's own OR
+        r, changed = sr.accumulate(r, upd)
+        return r, changed, it + 1
 
     r, _, rounds = jax.lax.while_loop(cond, body,
                                       (base, jnp.bool_(True), jnp.int32(0)))
@@ -500,19 +525,28 @@ class Engine:
                                        num_segments=num_segments,
                                        chunk_words=self.config.chunk_words)
 
-    def propagate(self, x: jax.Array, *, reverse: bool = False) -> jax.Array:
-        """One semiring round: ``out[a] = OR_{(a,b)} x[b]`` (packed)."""
+    def propagate(self, x: jax.Array, *, reverse: bool = False,
+                  sr: Semiring = BOOLEAN) -> jax.Array:
+        """One semiring round: ``out[a] = (+)_{(a,b)} extend(x[b])``.
+
+        ``sr=BOOLEAN`` (default) is the packed OR round of PR 1-7,
+        bit-identical to the pre-refactor engine; min-plus/count carriers
+        run one lane per column of ``x``."""
         if self.backend == "pallas":
             return _matmul_rows(self.adjacency(reverse=reverse), x,
-                                self.matmul_mode)
+                                self.matmul_mode, sr=sr)
         gather = self.edge_dst if not reverse else self.edge_src
         scatter = self.edge_src if not reverse else self.edge_dst
-        return self.segment_or(x[gather], scatter, self.graph.n_vertices)
+        if sr.packed:
+            return self.segment_or(x[gather], scatter, self.graph.n_vertices)
+        return sr.segment_combine(sr.extend(x[gather]), scatter,
+                                  num_segments=self.graph.n_vertices)
 
     def closure(self, base: jax.Array, *, reverse: bool = False,
                 max_iters: int | None = None,
-                sparse: bool | None = None) -> tuple[jax.Array, int]:
-        """Least fixpoint ``R = base ∨ propagate(R)``; returns (R, rounds).
+                sparse: bool | None = None,
+                sr: Semiring = BOOLEAN) -> tuple[jax.Array, int]:
+        """Least fixpoint ``R = base (+) propagate(R)``; returns (R, rounds).
 
         ``base`` is packed uint32 ``[V, W]``.  The lfp is unique, so any
         seed between the true base and the fixpoint converges to the same
@@ -531,11 +565,33 @@ class Engine:
         lowering — in interpret mode the per-grid-step Python dispatch
         dwarfs any skipped block, so the dense kernel is faster there
         (pass ``sparse=True`` to force the block-sparse path anyway,
-        e.g. for equivalence tests)."""
+        e.g. for equivalence tests).
+
+        ``sr`` selects the semiring.  Fixpoints need an idempotent (+)
+        (the convergence predicate compares successive planes), so the
+        COUNT carrier is refused — route counting is a *bounded* DP in
+        ``tdr_query.count_routes``.  Non-packed carriers always run the
+        dense cores (the frontier/block-sparse machinery is specific to
+        the packed boolean layout)."""
         max_iters = max_iters or self.graph.n_vertices
+        if not sr.idempotent:
+            raise ValueError(
+                f"closure needs an idempotent semiring, got {sr.name}; "
+                "use a bounded DP (tdr_query.count_routes) instead")
         if sparse is None:
             sparse = self.config.sparse and (
                 self.backend == "segment" or not self.interpret)
+        if not sr.packed:
+            if self.backend == "pallas":
+                return _closure_matmul(base, self.adjacency(reverse=reverse),
+                                       max_iters=max_iters,
+                                       mode=self.matmul_mode, sr=sr)
+            gather = self.edge_dst if not reverse else self.edge_src
+            scatter = self.edge_src if not reverse else self.edge_dst
+            return _closure_segment(base, gather, scatter,
+                                    num_segments=self.graph.n_vertices,
+                                    chunk_words=self.config.chunk_words,
+                                    max_iters=max_iters, sr=sr)
         if self.backend == "pallas":
             if sparse:
                 return _closure_blocksparse(

@@ -78,6 +78,8 @@ from . import bitset
 from . import engine as engine_mod
 from . import graph as graph_mod
 from . import pattern as pat
+from . import dfs_baseline as dfs_mod
+from .semiring import COUNT_CAP, DIST16
 from .tdr_build import TDRIndex, _null_words
 
 FALSE, TRUE, UNKNOWN = 0, 1, 2
@@ -85,6 +87,12 @@ FALSE, TRUE, UNKNOWN = 0, 1, 2
 _FULL = jnp.uint32(0xFFFFFFFF)
 
 EXACT_MODES = ("auto", "compact", "full", "legacy")
+
+#: query kinds the planner emits (one per query): boolean reachability,
+#: shortest pattern-constrained hop distance, an actual witness path, and
+#: bounded label-distinct route counting.  ``answer_plan`` serves "bool";
+#: the semiring executors at the bottom of this module serve the rest.
+QUERY_KINDS = ("bool", "dist", "witness", "count")
 
 
 # ------------------------------------------------------------------ plans
@@ -107,6 +115,9 @@ class QueryPlan:
     full_mask: np.ndarray   # int32 [J]        target subset state
     n_queries: int
     max_m: int
+    # per-*query* kind (one of QUERY_KINDS); () means all-"bool".  Kinds
+    # ride on the plan so mixed batches partition once, at the driver.
+    kinds: tuple = ()
 
     @property
     def n_jobs(self) -> int:
@@ -132,7 +143,7 @@ class QueryPlan:
             req_labels=np.concatenate(
                 [self.req_labels, np.full((p, self.max_m), -1, np.int32)]),
             full_mask=zrows(self.full_mask),
-            n_queries=self.n_queries, max_m=self.max_m)
+            n_queries=self.n_queries, max_m=self.max_m, kinds=self.kinds)
 
 
 @dataclasses.dataclass
@@ -227,15 +238,20 @@ def _compile_pattern_rows(index: TDRIndex, p: pat.Pattern,
 
 
 def pattern_rows(index: TDRIndex, p: pat.Pattern, max_m: int = 4,
-                 stats: "QueryStats | None" = None) -> PatternRows:
+                 stats: "QueryStats | None" = None,
+                 kind: str = "bool") -> PatternRows:
     """Cached plan rows for one pattern (hash-consed canonical key).
 
     The cache lives on the index (rows bake in ``lab_slot`` and the label
     word widths) and is a bounded LRU, so steady query traffic with
     repeated composite patterns skips DNF expansion and plane construction
     entirely — the serving layer leans on this for its plan cache.
-    ``stats`` counts the lookup (and the miss, if any) exactly."""
-    key = (pat.canonical_key(p), max_m)
+    ``stats`` counts the lookup (and the miss, if any) exactly.  ``kind``
+    partitions the LRU per query kind: the row *content* is
+    kind-independent, but a shared entry must never let one kind's
+    eviction/refresh pattern alias another's (the serving layer keys its
+    result cache the same way)."""
+    key = (pat.canonical_key(p), max_m, kind)
     if stats is not None:
         stats.plan_lookups += 1
     with _plan_cache_lock:
@@ -263,15 +279,28 @@ def compile_queries(index: TDRIndex,
                     queries: Sequence[tuple[int, int, pat.Pattern]],
                     max_m: int = 4,
                     stats: "QueryStats | None" = None) -> QueryPlan:
-    """Compile (u, v, pattern) triples into a vectorized ``QueryPlan``.
+    """Compile (u, v, pattern[, kind]) tuples into a ``QueryPlan``.
 
     Per-pattern rows come from the hash-consed plan cache
     (``pattern_rows``); only the endpoint columns and query-id row map are
     assembled fresh, so batches dominated by repeated patterns plan in
-    O(n_queries) numpy concatenation."""
+    O(n_queries) numpy concatenation.  The optional fourth element is one
+    of ``QUERY_KINDS`` (default "bool"); it does not change the plan rows,
+    only which executor the driver routes the query to."""
     cfg = index.cfg
     wl = bitset.n_words(cfg.lab_bits)
     wraw = bitset.n_words(max(index.graph.n_labels, 1))
+    kinds = []
+    norm = []
+    for q in queries:
+        kind = q[3] if len(q) > 3 else "bool"
+        if kind not in QUERY_KINDS:
+            raise ValueError(
+                f"unknown query kind {kind!r}; expected one of "
+                f"{QUERY_KINDS}")
+        kinds.append(kind)
+        norm.append((q[0], q[1], q[2]))
+    queries = norm
     rows_per_q = [pattern_rows(index, p, max_m, stats=stats)
                   for (_, _, p) in queries]
     counts = np.asarray([r.n_terms for r in rows_per_q], dtype=np.int64)
@@ -296,7 +325,8 @@ def compile_queries(index: TDRIndex,
         forb_raw_w=cat("forb_raw_w", wraw),
         req_labels=cat("req_labels", max_m),
         full_mask=cat("full_mask", 0),
-        n_queries=len(queries), max_m=max_m)
+        n_queries=len(queries), max_m=max_m,
+        kinds=tuple(kinds) if any(k != "bool" for k in kinds) else ())
 
 
 # ----------------------------------------------------------- phase 1 (jit)
@@ -1131,6 +1161,11 @@ def answer_plan(index: TDRIndex, plan: QueryPlan,
     if exact_mode not in EXACT_MODES:
         raise ValueError(f"unknown exact_mode {exact_mode!r}; expected one "
                          f"of {EXACT_MODES}")
+    if any(k != "bool" for k in plan.kinds):
+        raise ValueError(
+            "answer_plan serves kind='bool' plans only; route mixed-kind "
+            "batches through answer_mixed (or dist_batch / witness / "
+            "count_routes directly)")
     t0 = _t0 if _t0 is not None else time.perf_counter()
     eng = index.engine(backend, engine_config)
     stats = stats if stats is not None else QueryStats()
@@ -1288,3 +1323,647 @@ def answer_plan(index: TDRIndex, plan: QueryPlan,
 def answer(index: TDRIndex, u: int, v: int, p: pat.Pattern, **kw) -> bool:
     """Single-query convenience wrapper over ``answer_batch``."""
     return bool(answer_batch(index, [(u, v, p)], **kw)[0])
+
+
+# ------------------------------------------- semiring query kinds (PR 8)
+# The executors below answer the non-boolean QUERY_KINDS over the same
+# corridor-compacted subgraphs phase 2 uses, but with a (min, +) distance
+# DP ("dist"/"witness", uint16 lanes saturating at DIST_INF) or a
+# saturating route-count DP ("count", uint32 lanes clamped at ``cap``)
+# instead of the packed boolean closure.  Product-graph states are the
+# same (vertex, seen-required-subset) pairs; the carrier is a dense
+# [V', J, S] lane plane rather than one packed uint32 bitfield.
+#
+# Soundness of reusing the corridor: every vertex on a u→v walk is both
+# reachable from u and co-reachable to v, so it lies in the true
+# corridor, of which the Bloom corridor N_out(u) ∩ N_in(v) is a
+# superset — compaction never cuts a path or a counted walk.
+
+#: distance-plane INF (the uint16 carrier's saturation point)
+DIST_INF = int(np.iinfo(np.uint16).max)
+
+# int32 INF sentinel for the bidirectional meet arithmetic: large enough
+# to dominate any real distance (<= DIST_INF - 1), small enough that
+# sentinel + sentinel cannot wrap int32
+_DBIG = 1 << 24
+
+
+def _edge_dist_ops(lab, req_labels, forb_raw_w, max_m: int,
+                   evalid=None, neutral=None):
+    """Per-(job, edge|class) DP operands: ``allow`` bool [J, E] (edge
+    usable for the job) and ``sh`` int32 [J, E] (the subset bit the edge's
+    label sets, 0 if not required).  ``evalid`` masks bucket-padding edge
+    rows — duplicated edges are harmless for the idempotent boolean
+    closure but would double-count in the sum DP and must never relax a
+    distance either.  ``neutral`` marks merged label-class rows (always
+    allowed, no subset bit), as in ``_edge_state_masks``."""
+    labx = jnp.maximum(lab, 0)
+    okbit = (forb_raw_w[:, labx >> 5] >>
+             (labx & 31).astype(jnp.uint32)[None, :]) & 1        # [J, E|C]
+    allow = okbit == 0
+    if neutral is not None:
+        allow = allow | neutral[None, :]
+    if evalid is not None:
+        allow = allow & evalid[None, :]
+    sh = jnp.zeros((req_labels.shape[0], lab.shape[0]), jnp.int32)
+    for i in range(max_m):  # static unroll; require-sets hold distinct ids
+        match = req_labels[:, i][:, None] == lab[None, :]
+        if neutral is not None:
+            match = match & ~neutral[None, :]
+        sh = jnp.where(match, jnp.int32(1 << i), sh)
+    return allow, sh
+
+
+def _dist_meet(df, db, full_mask, best, n_states: int):
+    """best[j] = min over vertices x and state pairs (s1, s2) with
+    ``s1 | s2 == full_mask[j]`` of ``df[x,j,s1] + db[x,j,s2]`` — the
+    distance analogue of the boolean ``_meet``: min over the corridor
+    instead of an existence test."""
+    dfi = jnp.where(df == DIST_INF, _DBIG, df.astype(jnp.int32))
+    dbi = jnp.where(db == DIST_INF, _DBIG, db.astype(jnp.int32))
+    s_idx = jnp.arange(n_states, dtype=jnp.int32)
+    for s1 in range(n_states):  # static unroll, S <= 32
+        valid = (jnp.int32(s1) | s_idx)[None, :] == full_mask[:, None]
+        tot = dfi[:, :, s1][:, :, None] + dbi                   # [V', J, S]
+        tot = jnp.where(valid[None, :, :], tot, _DBIG)
+        best = jnp.minimum(best, tot.min(axis=(0, 2)))
+    return best
+
+
+def _dist_bidi_loop(df0, db0, push_f, push_b, full_mask, it_cap,
+                    n_states: int, max_rounds: int):
+    """Alternating bidirectional (min, +) fixpoint.  A job is done once
+    its best meet value is <= 2·it: after ``it`` rounds each plane holds
+    every product-distance <= it exactly, so any path of length
+    L <= 2·it has already met — the best is provably final.  ``it_cap``
+    is *traced* (k-hop-bounded queries stop at ceil(k/2) rounds without
+    a recompile per k)."""
+    j_n = df0.shape[1]
+    best0 = _dist_meet(df0, db0, full_mask,
+                       jnp.full(j_n, _DBIG, jnp.int32), n_states)
+
+    def cond(st):
+        _, _, best, cf, cb, it = st
+        done = best <= 2 * it
+        return ((cf | cb) & ~jnp.all(done)
+                & (it < max_rounds) & (it < it_cap))
+
+    def body(st):
+        df, db, best, cf, cb, it = st
+        # a direction whose last push relaxed nothing is at its fixpoint
+        updf = jax.lax.cond(cf, push_f,
+                            lambda a: jnp.full_like(a, DIST_INF), df)
+        ndf = jnp.minimum(df, updf)
+        updb = jax.lax.cond(cb, push_b,
+                            lambda a: jnp.full_like(a, DIST_INF), db)
+        ndb = jnp.minimum(db, updb)
+        best = _dist_meet(ndf, ndb, full_mask, best, n_states)
+        return (ndf, ndb, best, jnp.any(ndf != df), jnp.any(ndb != db),
+                it + 1)
+
+    st0 = (df0, db0, best0, jnp.bool_(True), jnp.bool_(True),
+           jnp.int32(0))
+    _, _, best, _, _, rounds = jax.lax.while_loop(cond, body, st0)
+    return best, rounds
+
+
+@functools.partial(jax.jit, static_argnames=("v_p", "n_states", "max_m",
+                                             "max_rounds"))
+def _dist_bidi(su, sv, req_labels, forb_raw_w, full_mask, sub_src,
+               sub_dst, sub_lab, evalid, it_cap, *, v_p: int,
+               n_states: int, max_m: int, max_rounds: int):
+    """Segment-family bidirectional distance core over a (sub)graph's
+    edge lists: one round = lane gather, per-edge subset transition
+    (take the min of "already had the label" and "just gained it"),
+    saturating +1, segment-min scatter."""
+    j_n = su.shape[0]
+    allow, sh = _edge_dist_ops(sub_lab, req_labels, forb_raw_w, max_m,
+                               evalid=evalid)
+    allowT = allow.T[:, :, None]                                # [E, J, 1]
+    shT = sh.T[:, :, None]
+    s_idx = jnp.arange(n_states, dtype=jnp.int32)
+    iota = jnp.arange(j_n)
+    inf = jnp.uint16(DIST_INF)
+
+    def push(dist, gat, scat):
+        rows = dist[gat]                                        # [E, J, S]
+        alt = jnp.take_along_axis(rows, s_idx[None, None, :] ^ shT,
+                                  axis=2)
+        ok = ((s_idx[None, None, :] & shT) == shT) & allowT
+        val = jnp.where(ok, jnp.minimum(rows, alt), inf)
+        val = val + (val < inf).astype(jnp.uint16)   # saturating +1
+        return jax.ops.segment_min(val, scat, num_segments=v_p)
+
+    df0 = jnp.full((v_p, j_n, n_states), DIST_INF,
+                   jnp.uint16).at[su, iota, 0].set(0)
+    db0 = jnp.full((v_p, j_n, n_states), DIST_INF,
+                   jnp.uint16).at[sv, iota, 0].set(0)
+    return _dist_bidi_loop(
+        df0, db0,
+        lambda d: push(d, sub_src, sub_dst),
+        lambda d: push(d, sub_dst, sub_src),
+        full_mask, it_cap, n_states, max_rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_m",
+                                             "max_rounds", "mode"))
+def _dist_bidi_matmul(su, sv, req_labels, forb_raw_w, full_mask, adj_rev,
+                      adj_fwd, class_label, it_cap, *, n_states: int,
+                      max_m: int, max_rounds: int, mode: str):
+    """Pallas-backend distance core: one ``kernels.lane_matmul`` (min
+    combine) per label class per direction per round, the distance plane
+    flattened to [V', J·S] lanes.  ``_matmul_rows`` applies the DIST16
+    extend (saturating +1) after each matmul; min is monotone, so
+    extend-after-reduce equals extend-before-reduce and the per-class
+    results combine by plain lane-min."""
+    j_n = su.shape[0]
+    v_p = adj_rev.shape[1]
+    neutral = class_label < 0
+    allow, sh = _edge_dist_ops(class_label, req_labels, forb_raw_w, max_m,
+                               neutral=neutral)
+    s_idx = jnp.arange(n_states, dtype=jnp.int32)
+    iota = jnp.arange(j_n)
+    inf = jnp.uint16(DIST_INF)
+
+    def push(dist, adj_set):
+        flat = dist.reshape(v_p, j_n * n_states)
+
+        def body(upd, operand):
+            adj_c, allow_c, sh_c = operand          # [V', Kw], [J], [J]
+            y = engine_mod._matmul_rows(
+                adj_c, flat, mode, sr=DIST16)[:v_p].reshape(
+                    v_p, j_n, n_states)
+            shc = sh_c[None, :, None]
+            alt = jnp.take_along_axis(y, s_idx[None, None, :] ^ shc,
+                                      axis=2)
+            ok = (((s_idx[None, None, :] & shc) == shc)
+                  & allow_c[None, :, None])
+            return jnp.minimum(upd, jnp.where(ok, jnp.minimum(y, alt),
+                                              inf)), None
+
+        upd, _ = jax.lax.scan(
+            body, jnp.full((v_p, j_n, n_states), DIST_INF, jnp.uint16),
+            (adj_set, allow.T, sh.T))
+        return upd
+
+    df0 = jnp.full((v_p, j_n, n_states), DIST_INF,
+                   jnp.uint16).at[su, iota, 0].set(0)
+    db0 = jnp.full((v_p, j_n, n_states), DIST_INF,
+                   jnp.uint16).at[sv, iota, 0].set(0)
+    return _dist_bidi_loop(
+        df0, db0,
+        lambda d: push(d, adj_rev),
+        lambda d: push(d, adj_fwd),
+        full_mask, it_cap, n_states, max_rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("v_p", "n_states", "max_m",
+                                             "max_rounds"))
+def _dist_forward_parents(su, req_labels, forb_raw_w, sub_src, sub_dst,
+                          sub_lab, evalid, *, v_p: int, n_states: int,
+                          max_m: int, max_rounds: int):
+    """Single-term forward distance DP with parent-edge planes.
+
+    Unit weights make the DP BFS-layered — a cell's first finite write is
+    its final distance — so recording a parent only on ``winner`` cells
+    (``upd < dist``) is exact.  Parent recovery is two-pass: the round's
+    arriving values are compared against the winning value and the
+    minimal matching edge id is scattered (no value<<shift|id packing,
+    which would overflow int32 on large |V'|·S).  Per-edge parent
+    scatters are inherently edge-indexed, so witness extraction uses this
+    segment core on both backends."""
+    allow, sh = _edge_dist_ops(sub_lab, req_labels[None, :],
+                               forb_raw_w[None, :], max_m, evalid=evalid)
+    allow = allow[0][:, None]                                   # [E, 1]
+    sh = sh[0][:, None]
+    s_idx = jnp.arange(n_states, dtype=jnp.int32)
+    inf = jnp.uint16(DIST_INF)
+    eids = jnp.arange(sub_lab.shape[0], dtype=jnp.int32)[:, None]
+    d0 = jnp.full((v_p, n_states), DIST_INF, jnp.uint16).at[su, 0].set(0)
+    p0 = jnp.full((v_p, n_states), -1, jnp.int32)
+
+    def cond(st):
+        _, _, ch, it = st
+        return ch & (it < max_rounds)
+
+    def body(st):
+        d, par, _, it = st
+        rows = d[sub_src]                                       # [E, S]
+        alt = jnp.take_along_axis(rows, s_idx[None, :] ^ sh, axis=1)
+        ok = ((s_idx[None, :] & sh) == sh) & allow
+        val = jnp.where(ok, jnp.minimum(rows, alt), inf)
+        val = val + (val < inf).astype(jnp.uint16)
+        upd = jax.ops.segment_min(val, sub_dst, num_segments=v_p)
+        winner = upd < d                  # first discovery == final dist
+        match = (val == upd[sub_dst]) & (val < inf)
+        cand = jnp.where(match, eids, jnp.int32(1 << 30))
+        parc = jax.ops.segment_min(cand, sub_dst, num_segments=v_p)
+        par = jnp.where(winner, parc, par)
+        return jnp.minimum(d, upd), par, jnp.any(winner), it + 1
+
+    d, par, _, rounds = jax.lax.while_loop(
+        cond, body, (d0, p0, jnp.bool_(True), jnp.int32(0)))
+    return d, par, rounds
+
+
+@functools.partial(jax.jit, static_argnames=("v_p", "n_states", "max_m",
+                                             "cap"))
+def _count_forward(su, sv, req_labels, forb_raw_w, full_mask, sub_src,
+                   sub_dst, sub_lab, evalid, hops, *, v_p: int,
+                   n_states: int, max_m: int, cap: int):
+    """Bounded route-count DP: w[x, j, s] = number of length-r walks
+    from u reaching x having seen subset s, every partial sum clamped at
+    ``cap``.  A target state s collects from s (label already seen) and
+    — when the edge's label is required, ``sh > 0`` — from s^sh, summing
+    both; ``hops`` is traced (``fori_loop``), so the bound changes
+    without a recompile.  Saturating add of non-negative values is
+    associative, so per-edge clamp + segment-sum + clamp equals clamping
+    the true total (the dfs_baseline oracle's semantics exactly)."""
+    j_n = su.shape[0]
+    allow, sh = _edge_dist_ops(sub_lab, req_labels, forb_raw_w, max_m,
+                               evalid=evalid)
+    allowT = allow.T[:, :, None]
+    shT = sh.T[:, :, None]
+    s_idx = jnp.arange(n_states, dtype=jnp.int32)
+    iota = jnp.arange(j_n)
+    capv = jnp.uint32(cap)
+    w0 = jnp.zeros((v_p, j_n, n_states),
+                   jnp.uint32).at[su, iota, 0].set(1)
+    total0 = jnp.where((su == sv) & (full_mask == 0), jnp.uint32(1),
+                       jnp.uint32(0))   # the empty walk
+
+    def body(_, st):
+        w, total = st
+        rows = w[sub_src]                                       # [E, J, S]
+        alt = jnp.take_along_axis(rows, s_idx[None, None, :] ^ shT,
+                                  axis=2)
+        contrib = rows + jnp.where(shT > 0, alt, 0)
+        ok = ((s_idx[None, None, :] & shT) == shT) & allowT
+        val = jnp.where(ok, jnp.minimum(contrib, capv), jnp.uint32(0))
+        wn = jnp.minimum(
+            jax.ops.segment_sum(val, sub_dst, num_segments=v_p), capv)
+        total = jnp.minimum(total + wn[sv, iota, full_mask], capv)
+        return wn, total
+
+    _, total = jax.lax.fori_loop(0, hops, body, (w0, total0))
+    return total
+
+
+class _KindChunk(NamedTuple):
+    """Host-side operands of one compacted (or full-graph) DP chunk."""
+    v_p: int                    # padded vertex bucket
+    su: np.ndarray              # renumbered sources int32 [J]
+    sv: np.ndarray              # renumbered targets int32 [J]
+    src: np.ndarray             # edge sources int32 [E'] (bucket-padded)
+    dst: np.ndarray             # edge targets int32 [E']
+    lab: np.ndarray             # edge labels int32 [E']
+    evalid: np.ndarray          # bool [E'], False on padding rows
+    sub_ids: np.ndarray | None  # local -> original vertex ids (None=full)
+    n_sub: int                  # |V'| before padding
+
+
+def _kind_chunk(index: TDRIndex, ex: ExactExecutor, plan: QueryPlan,
+                dev: PlanDevice, jobs: np.ndarray,
+                exact_mode: str) -> _KindChunk:
+    """Corridor-compact one job chunk for the lane DPs (same probe and
+    bucket discipline as ``ExactExecutor._run_bidi``, but edge padding
+    rows are *masked* via ``evalid`` instead of relying on idempotence)."""
+    g = index.graph
+    v_n = g.n_vertices
+    compact = exact_mode in ("auto", "compact")
+    if compact:
+        member = ex.corridor_members(dev, jobs)
+        active = member.any(axis=0)
+        n_sub = int(active.sum())
+        if (exact_mode == "auto"
+                and graph_mod.pad_bucket(max(n_sub, 1), lo=32) >= v_n):
+            compact = False
+    if compact:
+        sub_ids, renum, s, d, l = graph_mod.induced_edges(
+            g, active, src=ex.src_np)
+        su = renum[plan.u[jobs]].astype(np.int32)
+        sv = renum[plan.v[jobs]].astype(np.int32)
+        v_p = graph_mod.pad_bucket(max(n_sub, 1), lo=32)
+    else:
+        sub_ids = None
+        n_sub = v_p = v_n
+        s, d, l = ex.src_np, ex.dst_np, ex.lab_np
+        su = plan.u[jobs].astype(np.int32)
+        sv = plan.v[jobs].astype(np.int32)
+    e_real = int(s.shape[0])
+    e_p = graph_mod.pad_bucket(max(e_real, 1), lo=32)
+    evalid = np.zeros(e_p, dtype=bool)
+    evalid[:e_real] = True
+    if e_p > e_real:
+        rep = e_p - e_real
+        if e_real:
+            s = np.concatenate([s, np.repeat(s[:1], rep)])
+            d = np.concatenate([d, np.repeat(d[:1], rep)])
+            l = np.concatenate([l, np.repeat(l[:1], rep)])
+        else:   # corridor holds no edges: DP sees an empty, masked bucket
+            s = np.zeros(e_p, np.int32)
+            d = np.zeros(e_p, np.int32)
+            l = np.zeros(e_p, np.int32)
+    return _KindChunk(v_p, su, sv, np.ascontiguousarray(s),
+                      np.ascontiguousarray(d), np.ascontiguousarray(l),
+                      evalid, sub_ids, n_sub)
+
+
+def dist_batch(index: TDRIndex,
+               queries: Sequence[tuple[int, int, pat.Pattern]],
+               *, k: int | None = None, max_m: int = 4,
+               exact_chunk: int = 32, backend: str | None = None,
+               exact_mode: str = "auto",
+               engine_config: "engine_mod.EngineConfig | None" = None,
+               special_labels: Sequence[int] | None = None,
+               pin_m: int | None = None,
+               stats: QueryStats | None = None) -> np.ndarray:
+    """Shortest pattern-constrained hop distances.  Returns int64
+    [n_queries]; -1 = unreachable (or farther than ``k`` when a k-hop
+    bound is given — the bound also caps the DP at ceil(k/2) rounds,
+    traced, so varying k never recompiles).
+
+    Multi-term patterns take the min over terms.  ``exact_mode`` follows
+    ``answer_plan`` minus "legacy"; on the pallas backend chunks run the
+    per-label-class ``lane_matmul`` core when the class matrices fit the
+    engine's dense budget, else the segment core (bit-equal results)."""
+    if exact_mode not in ("auto", "compact", "full"):
+        raise ValueError(f"unknown exact_mode {exact_mode!r} for dist; "
+                         "expected auto | compact | full")
+    t0 = time.perf_counter()
+    plan = compile_queries(index, queries, max_m=max_m, stats=stats)
+    eng = index.engine(backend, engine_config)
+    stats = stats if stats is not None else QueryStats()
+    stats.n_queries += plan.n_queries
+    stats.n_jobs += plan.n_jobs
+    out = np.full(plan.n_queries, -1, np.int64)
+    if plan.n_jobs == 0:
+        return out
+    ex = _executor(index, eng)
+    jobs_all = np.arange(plan.n_jobs)
+    m_eff, n_states = ex.eff_states(plan, jobs_all, pin_m)
+    if n_states > 32:
+        raise ValueError(
+            f"max_m={m_eff} needs {n_states} subset states; the lane "
+            "executor holds at most 32 (max_m <= 5)")
+    dev = PlanDevice(jnp.asarray(plan.u), jnp.asarray(plan.v),
+                     jnp.asarray(plan.req_labels),
+                     jnp.asarray(plan.forb_raw_w),
+                     jnp.asarray(plan.full_mask))
+    best_j = np.full(plan.n_jobs, _DBIG, np.int64)
+    for c0 in range(0, plan.n_jobs, exact_chunk):
+        jobs = jobs_all[c0:c0 + exact_chunk]
+        real_n = len(jobs)
+        if real_n < exact_chunk:   # pad to a stable jit shape
+            jobs = np.concatenate(
+                [jobs, np.full(exact_chunk - real_n, jobs[0])])
+        ch = _kind_chunk(index, ex, plan, dev, jobs, exact_mode)
+        max_rounds = ch.v_p * n_states + 1
+        it_cap = jnp.int32(max_rounds if k is None
+                           else max(-(-int(k) // 2), 0))
+        req = jnp.asarray(plan.req_labels[jobs][:, :m_eff])
+        frw = jnp.asarray(plan.forb_raw_w[jobs])
+        fm = jnp.asarray(plan.full_mask[jobs])
+        su, sv = jnp.asarray(ch.su), jnp.asarray(ch.sv)
+        best = rounds = None
+        if eng.backend == "pallas":
+            special = ex.special_labels(plan, jobs)
+            if special_labels is not None:
+                special = tuple(sorted(
+                    set(int(l) for l in special_labels) | set(special)))
+            kw_b = bitset.n_words(ch.v_p)
+            n_mats = 2 * (len(special) + 1)
+            if n_mats * ch.v_p * kw_b * 4 <= eng.config.max_dense_bytes:
+                class_label = jnp.asarray(
+                    np.asarray(special + (-1,), np.int32))
+                if ch.sub_ids is None:
+                    adj_rev = eng.label_class_adjacency(special,
+                                                        reverse=True)
+                    adj_fwd = eng.label_class_adjacency(special,
+                                                       reverse=False)
+                else:
+                    # padding rows duplicate edge 0: the same bit set
+                    # twice — idempotent in a packed bit-matrix
+                    adj_rev = jnp.asarray(
+                        engine_mod.pack_label_class_edges_np(
+                            ch.src, ch.dst, ch.lab, ch.v_p, special,
+                            reverse=True))
+                    adj_fwd = jnp.asarray(
+                        engine_mod.pack_label_class_edges_np(
+                            ch.src, ch.dst, ch.lab, ch.v_p, special,
+                            reverse=False))
+                best_d, rounds = _dist_bidi_matmul(
+                    su, sv, req, frw, fm, adj_rev, adj_fwd, class_label,
+                    it_cap, n_states=n_states, max_m=m_eff,
+                    max_rounds=max_rounds, mode=eng.matmul_mode)
+                best = np.asarray(best_d)
+        if best is None:
+            best_d, rounds = _dist_bidi(
+                su, sv, req, frw, fm, jnp.asarray(ch.src),
+                jnp.asarray(ch.dst), jnp.asarray(ch.lab),
+                jnp.asarray(ch.evalid), it_cap, v_p=ch.v_p,
+                n_states=n_states, max_m=m_eff, max_rounds=max_rounds)
+            best = np.asarray(best_d)
+        best_j[jobs[:real_n]] = best[:real_n]
+        stats._round_parts.append(rounds)
+        stats.corridor_active += ch.n_sub
+        stats.corridor_total += index.graph.n_vertices
+    bq = np.full(plan.n_queries, _DBIG, np.int64)
+    np.minimum.at(bq, plan.qid, best_j)
+    reach = bq < _DBIG
+    out[reach] = bq[reach]
+    if k is not None:
+        out[out > int(k)] = -1
+    stats.exact_jobs += plan.n_jobs
+    stats.phase2_s += time.perf_counter() - t0
+    return out
+
+
+def dist(index: TDRIndex, u: int, v: int, p: pat.Pattern, **kw) -> int:
+    """Single-query shortest pattern-constrained distance (hops), -1 if
+    unreachable — convenience wrapper over ``dist_batch``."""
+    return int(dist_batch(index, [(u, v, p)], **kw)[0])
+
+
+def witness(index: TDRIndex, u: int, v: int, p: pat.Pattern,
+            *, max_m: int = 4, backend: str | None = None,
+            exact_mode: str = "auto",
+            engine_config: "engine_mod.EngineConfig | None" = None,
+            pin_m: int | None = None,
+            stats: QueryStats | None = None
+            ) -> list[tuple[int, int, int]] | None:
+    """An actual shortest witness path for a PCR query.
+
+    Returns a list of ``(x, y, label)`` edges chaining u→v whose label
+    set satisfies ``p`` and whose length equals the exact shortest
+    pattern-constrained distance; ``[]`` when the empty path answers
+    (u == v and some term requires nothing); ``None`` when unreachable.
+    Every returned path is replayed against the raw graph through
+    ``dfs_baseline.verify_witness`` before it leaves this function."""
+    if exact_mode not in ("auto", "compact", "full"):
+        raise ValueError(f"unknown exact_mode {exact_mode!r} for witness; "
+                         "expected auto | compact | full")
+    plan = compile_queries(index, [(u, v, p)], max_m=max_m, stats=stats)
+    if plan.n_jobs == 0:
+        return None
+    eng = index.engine(backend, engine_config)
+    ex = _executor(index, eng)
+    jobs = np.arange(plan.n_jobs)
+    m_eff, n_states = ex.eff_states(plan, jobs, pin_m)
+    if n_states > 32:
+        raise ValueError(
+            f"max_m={m_eff} needs {n_states} subset states; the lane "
+            "executor holds at most 32 (max_m <= 5)")
+    dev = PlanDevice(jnp.asarray(plan.u), jnp.asarray(plan.v),
+                     jnp.asarray(plan.req_labels),
+                     jnp.asarray(plan.forb_raw_w),
+                     jnp.asarray(plan.full_mask))
+    ch = _kind_chunk(index, ex, plan, dev, jobs, exact_mode)
+    max_rounds = ch.v_p * n_states + 1
+    src_j, dst_j = jnp.asarray(ch.src), jnp.asarray(ch.dst)
+    lab_j, ev_j = jnp.asarray(ch.lab), jnp.asarray(ch.evalid)
+    best_t = -1
+    best_len = None
+    planes: list = []
+    for t in range(plan.n_jobs):   # term shapes identical -> one compile
+        dplane, par, _ = _dist_forward_parents(
+            jnp.int32(int(ch.su[t])),
+            jnp.asarray(plan.req_labels[t, :m_eff]),
+            jnp.asarray(plan.forb_raw_w[t]), src_j, dst_j, lab_j, ev_j,
+            v_p=ch.v_p, n_states=n_states, max_m=m_eff,
+            max_rounds=max_rounds)
+        planes.append((dplane, par))
+        d_t = int(np.asarray(
+            dplane[int(ch.sv[t]), int(plan.full_mask[t])]))
+        if d_t < DIST_INF and (best_len is None or d_t < best_len):
+            best_t, best_len = t, d_t
+    if best_len is None:
+        return None
+    if best_len == 0:
+        return []
+    dn = np.asarray(planes[best_t][0]).astype(np.int64)
+    pn = np.asarray(planes[best_t][1])
+    req = plan.req_labels[best_t]
+    x = int(ch.sv[best_t])
+    state = int(plan.full_mask[best_t])
+    path: list[tuple[int, int, int]] = []
+    while dn[x, state] > 0:
+        e = int(pn[x, state])
+        px, lx = int(ch.src[e]), int(ch.lab[e])
+        shx = 0
+        for i in range(m_eff):
+            if int(req[i]) == lx:
+                shx = 1 << i
+        want = dn[x, state] - 1
+        nxt = None
+        # the pre-edge state dropped the edge's subset bit, or already
+        # had the label; either predecessor one hop closer is valid
+        for so in ([state, state ^ shx] if shx else [state]):
+            if dn[px, so] == want:
+                nxt = so
+                break
+        if nxt is None:
+            raise RuntimeError("witness backtrack: broken parent chain "
+                               f"at vertex {x}, state {state}")
+        path.append((px, x, lx))
+        x, state = px, nxt
+    path.reverse()
+    if ch.sub_ids is not None:   # map compacted ids back to the graph
+        path = [(int(ch.sub_ids[a]), int(ch.sub_ids[b]), l)
+                for (a, b, l) in path]
+    if len(path) != best_len or not dfs_mod.verify_witness(
+            index.graph, u, v, p, path):
+        raise RuntimeError("witness verification failed: extracted path "
+                           "does not replay on the graph")
+    return path
+
+
+def count_routes(index: TDRIndex, u: int, v: int, p: pat.Pattern,
+                 *, hops: int, cap: int = COUNT_CAP, max_m: int = 4,
+                 backend: str | None = None, exact_mode: str = "auto",
+                 engine_config: "engine_mod.EngineConfig | None" = None,
+                 pin_m: int | None = None,
+                 stats: QueryStats | None = None) -> int:
+    """Number of pattern-satisfying u→v walks of length <= ``hops``,
+    saturating at ``cap`` (``semiring.COUNT_CAP`` by default).
+
+    Walks, not simple paths — a cycle counts per traversal, exactly the
+    product-graph DP the ``dfs_baseline.count_routes`` oracle runs.
+    Single-DNF-term patterns only: terms of a composite pattern overlap,
+    so a per-term sum would double-count (the same restriction as the
+    oracle).  ``hops`` is traced — varying it never recompiles."""
+    if exact_mode not in ("auto", "compact", "full"):
+        raise ValueError(f"unknown exact_mode {exact_mode!r} for count; "
+                         "expected auto | compact | full")
+    terms = pat.to_dnf(p)
+    if len(terms) != 1:
+        raise ValueError(
+            f"count_routes needs a single-DNF-term pattern, got "
+            f"{len(terms)} terms")
+    plan = compile_queries(index, [(u, v, p)], max_m=max_m, stats=stats)
+    eng = index.engine(backend, engine_config)
+    ex = _executor(index, eng)
+    jobs = np.arange(plan.n_jobs)
+    m_eff, n_states = ex.eff_states(plan, jobs, pin_m)
+    if n_states > 32:
+        raise ValueError(
+            f"max_m={m_eff} needs {n_states} subset states; the lane "
+            "executor holds at most 32 (max_m <= 5)")
+    dev = PlanDevice(jnp.asarray(plan.u), jnp.asarray(plan.v),
+                     jnp.asarray(plan.req_labels),
+                     jnp.asarray(plan.forb_raw_w),
+                     jnp.asarray(plan.full_mask))
+    ch = _kind_chunk(index, ex, plan, dev, jobs, exact_mode)
+    if ch.src.shape[0] * cap >= 1 << 32:
+        raise ValueError(
+            f"cap={cap} with {ch.src.shape[0]} edges could wrap the "
+            "uint32 count accumulator; lower the cap")
+    total = _count_forward(
+        jnp.asarray(ch.su), jnp.asarray(ch.sv),
+        jnp.asarray(plan.req_labels[:, :m_eff]),
+        jnp.asarray(plan.forb_raw_w), jnp.asarray(plan.full_mask),
+        jnp.asarray(ch.src), jnp.asarray(ch.dst), jnp.asarray(ch.lab),
+        jnp.asarray(ch.evalid), jnp.int32(int(hops)), v_p=ch.v_p,
+        n_states=n_states, max_m=m_eff, cap=int(cap))
+    return int(np.asarray(total)[0])
+
+
+def answer_mixed(index: TDRIndex, queries: Sequence[tuple], *,
+                 hops: int = 8, k: int | None = None,
+                 cap: int = COUNT_CAP, max_m: int = 4,
+                 backend: str | None = None, exact_mode: str = "auto",
+                 engine_config: "engine_mod.EngineConfig | None" = None,
+                 stats: QueryStats | None = None) -> list:
+    """Answer a mixed-kind batch of ``(u, v, pattern[, kind])`` queries.
+
+    Results align with the input order: bool for "bool", int distance
+    (-1 unreachable) for "dist", an edge list / [] / None for "witness",
+    and an int for "count" (bounded by ``hops``, clamped at ``cap``).
+    Same-kind queries batch together; "witness"/"count" run per query."""
+    kinds = [(q[3] if len(q) > 3 else "bool") for q in queries]
+    for kd in kinds:
+        if kd not in QUERY_KINDS:
+            raise ValueError(f"unknown query kind {kd!r}; expected one "
+                             f"of {QUERY_KINDS}")
+    common = dict(max_m=max_m, backend=backend, exact_mode=exact_mode,
+                  engine_config=engine_config, stats=stats)
+    results: list = [None] * len(queries)
+    bool_ix = [i for i, kd in enumerate(kinds) if kd == "bool"]
+    if bool_ix:
+        ans = answer_batch(index, [queries[i][:3] for i in bool_ix],
+                           **common)
+        for i, a in zip(bool_ix, ans):
+            results[i] = bool(a)
+    dist_ix = [i for i, kd in enumerate(kinds) if kd == "dist"]
+    if dist_ix:
+        ds = dist_batch(index, [queries[i][:3] for i in dist_ix], k=k,
+                        **common)
+        for i, dv in zip(dist_ix, ds):
+            results[i] = int(dv)
+    for i, kd in enumerate(kinds):
+        if kd == "witness":
+            results[i] = witness(index, *queries[i][:3], **common)
+        elif kd == "count":
+            results[i] = count_routes(index, *queries[i][:3], hops=hops,
+                                      cap=cap, **common)
+    return results

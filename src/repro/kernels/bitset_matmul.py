@@ -113,3 +113,110 @@ def bitset_matmul(a_packed: jax.Array, x: jax.Array, *, ti: int = 128,
         interpret=interpret,
     )(a_p, x_p)
     return out[:m, :w]
+
+
+# ---------------------------------------------------------------------------
+# lane-width-generic semiring variant
+# ---------------------------------------------------------------------------
+# Same streaming structure as ``_kernel`` — adjacency consumed 32 columns
+# per packed word, a 0/1 bit wrapped to an all-ones lane mask — but the
+# carrier ``x`` holds one semiring lane per element (uint8/uint16/uint32)
+# instead of 32 packed graph bits, and the accumulation is the semiring
+# combine:
+#
+#   or :  acc |= sel & x[j]            (identity 0)
+#   min:  acc  = min(acc, x[j] | ~sel) (non-selected lanes become
+#                                       dtype-max = INF; identity INF)
+#   sum:  acc  = min(acc + (sel & x[j]), cap)
+#                                      (identity 0; the per-step clamp is
+#                                       exact — saturating add of
+#                                       non-negative values is associative)
+#
+# All three forms are branch-free: selection is the same mask trick, with
+# ``x | ~sel`` turning a de-selected lane into the min-identity.
+
+_ACC_INIT = {"or": lambda dt: jnp.zeros((), dt),
+             "min": lambda dt: jnp.array(jnp.iinfo(dt).max, dt),
+             "sum": lambda dt: jnp.zeros((), dt)}
+
+
+def _lane_kernel(a_ref, x_ref, o_ref, *, tk: int, op: str, cap: int):
+    k_step = pl.program_id(2)
+    dt = o_ref.dtype
+    ident = _ACC_INIT[op](dt)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, ident)
+
+    a_words = a_ref[...]                       # [TI, TK//32] uint32
+    x = x_ref[...]                             # [TK, TW]     carrier lanes
+
+    acc = jnp.full_like(o_ref[...], ident)
+    for wk in range(tk // WORD):               # static unroll over words
+        col = a_words[:, wk]
+        for b in range(WORD):
+            bit = ((col >> jnp.uint32(b)) & 1).astype(dt)
+            sel = (jnp.zeros((), dt) - bit)[:, None]     # 0x00.. / 0xFF..
+            row = x[wk * WORD + b][None, :]
+            if op == "or":
+                acc |= sel & row
+            elif op == "min":
+                acc = jnp.minimum(acc, row | ~sel)
+            else:
+                acc = jnp.minimum(acc + (sel & row), jnp.array(cap, dt))
+    if op == "or":
+        o_ref[...] |= acc
+    elif op == "min":
+        o_ref[...] = jnp.minimum(o_ref[...], acc)
+    else:
+        o_ref[...] = jnp.minimum(o_ref[...] + acc, jnp.array(cap, dt))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "cap", "ti", "tk", "tw",
+                                    "interpret"))
+def lane_matmul(a_packed: jax.Array, x: jax.Array, *, op: str,
+                cap: int = 0, ti: int = 128, tk: int = 128, tw: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """``(+)_j (A[i,j] (x) X[j,:])`` — packed-bit adjacency, lane carrier.
+
+    Args:
+      a_packed: uint32 [M, K//32] adjacency bit-rows (bit j of row i).
+      x:        [K, W] semiring carrier lanes (uint8/uint16/uint32).
+      op:       lane combine — "or", "min" (identity dtype-max) or
+                "sum" (saturating at ``cap``).
+    Returns:
+      [M, W] in ``x.dtype``.  Padding rows of ``a_packed`` have no bits
+      set, so pad lanes never leak into real outputs regardless of op.
+    """
+    assert op in ("or", "min", "sum"), op
+    m, kw = a_packed.shape
+    k, w = x.shape
+    assert kw * WORD == k, (a_packed.shape, x.shape)
+    ti = min(ti, m) or 1
+    tk = min(tk, k) or WORD
+    tk = max(WORD, (tk // WORD) * WORD)
+    tw = min(tw, w) or 1
+
+    m_pad = -(-m // ti) * ti
+    k_pad = -(-k // tk) * tk
+    w_pad = -(-w // tw) * tw
+    a_p = jnp.pad(a_packed, ((0, m_pad - m), (0, (k_pad - k) // WORD)))
+    x_p = jnp.pad(x, ((0, k_pad - k), (0, w_pad - w)))
+
+    grid = (m_pad // ti, w_pad // tw, k_pad // tk)
+    out = pl.pallas_call(
+        functools.partial(_lane_kernel, tk=tk, op=op, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, tk // WORD), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tw), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((ti, tw), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, w_pad), x.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_p, x_p)
+    return out[:m, :w]

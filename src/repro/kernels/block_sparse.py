@@ -155,6 +155,213 @@ def block_sparse_matmul(comp: BlockCompressed, x: jax.Array, *,
     return out[:m]
 
 
+# ----------------------------------------------- lane-width-generic variant
+# Same two-level traversal, but X carries one semiring lane per element
+# (uint8/uint16/uint32) instead of 32 packed bits, and the per-block
+# short-circuits generalize: ALL_ZERO contributes the (+)-identity (skip),
+# ALL_ONE contributes the k-block column-(+) of X, MIXED contracts the
+# pool block with the lane combine.  ``op`` in {"or", "min", "sum"}; the
+# min identity is dtype-max (INF) and sum saturates at ``cap``.
+
+def _lane_ident(op: str, dt):
+    if op == "min":
+        return jnp.array(jnp.iinfo(dt).max, dt)
+    return jnp.zeros((), dt)
+
+
+def _lane_kernel(states_ref, slots_ref, xany_ref, pool_ref, x_ref, colr_ref,
+                 o_ref, *, bw: int, op: str, cap: int):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+    dt = o_ref.dtype
+    ident = _lane_ident(op, dt)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, ident)
+
+    st = states_ref[i, k]
+    live = xany_ref[k] != 0
+
+    @pl.when(live & (st == ALL_ONE))
+    def _one():
+        row = colr_ref[0][None, :]
+        if op == "or":
+            o_ref[...] |= row
+        elif op == "min":
+            o_ref[...] = jnp.minimum(o_ref[...], row)
+        else:
+            o_ref[...] = jnp.minimum(o_ref[...] + row, jnp.array(cap, dt))
+
+    @pl.when(live & (st == MIXED))
+    def _mixed():
+        a = pool_ref[0]                        # [br, bw] uint32
+        x = x_ref[...]                         # [bw*32, TW] carrier lanes
+        acc = jnp.full_like(o_ref[...], ident)
+        for wk in range(bw):                   # static bit-plane unroll
+            col = a[:, wk]
+            for b in range(WORD):
+                bit = ((col >> jnp.uint32(b)) & jnp.uint32(1)).astype(dt)
+                sel = (jnp.zeros((), dt) - bit)[:, None]
+                row = x[wk * WORD + b][None, :]
+                if op == "or":
+                    acc |= sel & row
+                elif op == "min":
+                    acc = jnp.minimum(acc, row | ~sel)
+                else:
+                    acc = jnp.minimum(acc + (sel & row), jnp.array(cap, dt))
+        if op == "or":
+            o_ref[...] |= acc
+        elif op == "min":
+            o_ref[...] = jnp.minimum(o_ref[...], acc)
+        else:
+            o_ref[...] = jnp.minimum(o_ref[...] + acc, jnp.array(cap, dt))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("br", "bw", "tw", "op", "cap",
+                                    "interpret"))
+def _block_sparse_lane_call(states, slots, xany, pool, x, colr, *, br: int,
+                            bw: int, tw: int, op: str, cap: int,
+                            interpret: bool):
+    mb, kb = states.shape
+    w = x.shape[1]
+    bk = bw * WORD
+    tw = min(tw, w) or 1
+    w_pad = -(-w // tw) * tw
+    ident = _lane_ident(op, x.dtype)
+    x_p = jnp.pad(x, ((0, 0), (0, w_pad - w)), constant_values=ident)
+    colr_p = jnp.pad(colr, ((0, 0), (0, w_pad - w)), constant_values=ident)
+
+    grid = (mb, w_pad // tw, kb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bw),
+                         lambda i, j, k, st, sl, xa: (sl[i, k], 0, 0)),
+            pl.BlockSpec((bk, tw), lambda i, j, k, st, sl, xa: (k, j)),
+            pl.BlockSpec((1, tw), lambda i, j, k, st, sl, xa: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((br, tw),
+                               lambda i, j, k, st, sl, xa: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_lane_kernel, bw=bw, op=op, cap=cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * br, w_pad), x.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(states.astype(jnp.int32), slots, xany, pool, x_p, colr_p)
+    return out[:, :w]
+
+
+def _pad_k_lanes(x: jax.Array, k_pad: int, op: str) -> jax.Array:
+    """K-pad with the (+)-identity so pad rows cannot perturb any op.
+
+    (The bit-selection already masks pad rows out for ZERO/MIXED blocks,
+    but an ALL_ONE block spanning the pad region reduces over them.)"""
+    if x.shape[0] < k_pad:
+        pad = jnp.full((k_pad - x.shape[0],) + x.shape[1:],
+                       _lane_ident(op, x.dtype), x.dtype)
+        x = jnp.concatenate([x, pad], axis=0)
+    return x
+
+
+def _k_block_lane_summaries(x: jax.Array, kb: int, bk: int, op: str,
+                            cap: int):
+    """Per-k-block column-(+) and liveness flags of the lane operand."""
+    xr = _pad_k_lanes(x, kb * bk, op).reshape(kb, bk, x.shape[1])
+    ident = _lane_ident(op, x.dtype)
+    if op == "or":
+        colr = jax.lax.reduce(xr, jnp.zeros((), x.dtype),
+                              jax.lax.bitwise_or, (1,))
+    elif op == "min":
+        colr = jnp.min(xr, axis=1)
+    else:
+        colr = jnp.minimum(jnp.sum(xr.astype(jnp.uint32), axis=1),
+                           jnp.uint32(cap)).astype(x.dtype)
+    xany = jnp.any(xr != ident, axis=(1, 2)).astype(jnp.int32)
+    return colr, xany
+
+
+def block_sparse_lane_matmul(comp: BlockCompressed, x: jax.Array, *,
+                             op: str, cap: int = 0, tw: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """``(+)_j (A[i,j] (x) X[j,:])`` with A block-compressed, X in
+    semiring carrier lanes.  Identical to ``lane_matmul`` on the
+    decompressed adjacency."""
+    m, _ = comp.shape
+    mb, kb = comp.grid
+    bk = comp.bw * WORD
+    colr, xany = _k_block_lane_summaries(x, kb, bk, op, cap)
+    out = _block_sparse_lane_call(
+        comp.states, comp.slots, xany, comp.pool,
+        _pad_k_lanes(x, kb * bk, op), colr, br=comp.br, bw=comp.bw,
+        tw=tw, op=op, cap=cap, interpret=interpret)
+    return out[:m]
+
+
+def block_sparse_lane_matmul_ref(comp: BlockCompressed, x: jax.Array, *,
+                                 op: str, cap: int = 0) -> jax.Array:
+    """Pure-jnp oracle for ``block_sparse_lane_matmul``."""
+    m, _ = comp.shape
+    mb, kb = comp.grid
+    br, bw = comp.br, comp.bw
+    bk = bw * WORD
+    w = x.shape[1]
+    ident = _lane_ident(op, x.dtype)
+    xr = _pad_k_lanes(x, kb * bk, op).reshape(kb, bk, w)
+    colr, xany = _k_block_lane_summaries(x, kb, bk, op, cap)
+
+    one = (comp.states == ALL_ONE) & (xany != 0)[None, :]
+    one_vals = jnp.where(one[:, :, None], colr[None, :, :], ident)
+    if op == "or":
+        one_c = jax.lax.reduce(one_vals, jnp.zeros((), x.dtype),
+                               jax.lax.bitwise_or, (1,))
+    elif op == "min":
+        one_c = jnp.min(one_vals, axis=1)
+    else:
+        one_c = jnp.minimum(jnp.sum(one_vals.astype(jnp.uint32), axis=1),
+                            jnp.uint32(cap)).astype(x.dtype)
+
+    def blk(a_blk, x_blk):                                # [br,bw],[bk,W]
+        a_bool = bitset.unpack_bits(a_blk, bk)[:, :, None]
+        if op == "or":
+            vals = jnp.where(a_bool, x_blk[None], jnp.zeros((), x.dtype))
+            return jax.lax.reduce(vals, jnp.zeros((), x.dtype),
+                                  jax.lax.bitwise_or, (1,))
+        if op == "min":
+            return jnp.min(jnp.where(a_bool, x_blk[None], ident), axis=1)
+        vals = jnp.where(a_bool, x_blk[None].astype(jnp.uint32),
+                         jnp.uint32(0))
+        return jnp.minimum(jnp.sum(vals, axis=1),
+                           jnp.uint32(cap)).astype(x.dtype)
+
+    contrib = jax.vmap(blk)(comp.pool, xr[comp.mix_bj])   # [P, br, W]
+    flat = contrib.reshape(contrib.shape[0], br * w)
+    if op == "or":
+        mix = bitset.segment_or_words(flat, comp.mix_bi, num_segments=mb)
+    elif op == "min":
+        mix = jax.ops.segment_min(flat, comp.mix_bi, num_segments=mb)
+    else:
+        mix = jnp.minimum(
+            jax.ops.segment_sum(flat.astype(jnp.uint32), comp.mix_bi,
+                                num_segments=mb),
+            jnp.uint32(cap)).astype(x.dtype)
+    mix = mix.reshape(mb, br, w)
+    if op == "or":
+        out = mix | one_c[:, None, :]
+    elif op == "min":
+        out = jnp.minimum(mix, one_c[:, None, :])
+    else:
+        out = jnp.minimum(mix.astype(jnp.uint32)
+                          + one_c[:, None, :].astype(jnp.uint32),
+                          jnp.uint32(cap)).astype(x.dtype)
+    return out.reshape(mb * br, w)[:m]
+
+
 # ------------------------------------------------------------- jnp oracle
 def block_sparse_matmul_ref(comp: BlockCompressed,
                             x: jax.Array) -> jax.Array:

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import bitset
 from . import block_sparse, ref
-from .bitset_matmul import bitset_matmul
+from .bitset_matmul import bitset_matmul, lane_matmul
 from .pattern_filter import way_filter
 from .popcount import popcount_rows
 
@@ -62,6 +62,29 @@ def frontier_step(a_packed: jax.Array, x: jax.Array, *,
         return frontier_step_mxu(a_packed, x)
     if mode == "ref":
         return ref.bitset_matmul_ref(a_packed, x)
+    raise ValueError(mode)
+
+
+def frontier_step_lanes(a_packed: jax.Array, x: jax.Array, *, op: str,
+                        cap: int = 0, mode: str = "auto",
+                        tiles: tuple[int, int, int] | None = None
+                        ) -> jax.Array:
+    """One semiring expansion round over carrier *lanes* (uint8/16/32
+    per element, not packed bits): ``(+)_j (A[i,j] (x) X[j,:])``.
+
+    ``op`` selects the lane combine ("or" | "min" | "sum"); the min
+    identity is dtype-max (= INF), sum saturates at ``cap``.  Same
+    mode contract as ``frontier_step``.
+    """
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    tile_kw = dict(zip(("ti", "tk", "tw"), tiles)) if tiles else {}
+    if mode in ("pallas", "interpret"):
+        KERNEL_INVOCATIONS["lane_matmul"] += 1
+        return lane_matmul(a_packed, x, op=op, cap=cap,
+                           interpret=(mode == "interpret"), **tile_kw)
+    if mode == "ref":
+        return ref.lane_matmul_ref(a_packed, x, op=op, cap=cap)
     raise ValueError(mode)
 
 

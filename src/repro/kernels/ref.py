@@ -19,6 +19,35 @@ def bitset_matmul_ref(a_packed: jax.Array, x: jax.Array) -> jax.Array:
     return bitset.pack_bits(prod)                           # [M, W]
 
 
+def lane_matmul_ref(a_packed: jax.Array, x: jax.Array, *, op: str,
+                    cap: int = 0) -> jax.Array:
+    """``(+)_j (A[i,j] (x) X[j,:])`` over semiring carrier lanes.
+
+    Dense oracle for ``bitset_matmul.lane_matmul``: unpack the adjacency
+    bits and reduce along K with the lane combine (OR / min-with-INF /
+    saturating sum).  Materializes an [M, K, W] transient — fine at the
+    test/smoke scales the oracle runs at, not a production path.
+    """
+    m, kw = a_packed.shape
+    k, w = x.shape
+    a_bool = bitset.unpack_bits(a_packed, k)                # [M, K]
+    sel = a_bool[:, :, None]                                # [M, K, 1]
+    if op == "or":
+        vals = jnp.where(sel, x[None], jnp.zeros((), x.dtype))
+        return jax.lax.reduce(vals, jnp.zeros((), x.dtype),
+                              jnp.bitwise_or, (1,))
+    if op == "min":
+        inf = jnp.array(jnp.iinfo(x.dtype).max, x.dtype)
+        vals = jnp.where(sel, x[None], inf)
+        return jnp.min(vals, axis=1)
+    assert op == "sum", op
+    # inputs are <= cap (the DP clamps every round), so a uint32 accumulator
+    # cannot wrap before the clamp: K * cap <= 2^16 * (2^15-1) < 2^32
+    vals = jnp.where(sel, x[None].astype(jnp.uint32), jnp.uint32(0))
+    return jnp.minimum(jnp.sum(vals, axis=1),
+                       jnp.uint32(cap)).astype(x.dtype)
+
+
 def way_filter_ref(h_vtx, h_lab, v_vtx, v_lab, vbits, req, forb, null_plane):
     """Reference way-viability predicate (mirrors tdr_query phase 1)."""
     has_tgt = bitset.words_contain(h_vtx, vbits[:, None, :])

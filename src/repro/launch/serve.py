@@ -26,9 +26,19 @@ flight.  The design goal is **zero jit recompiles at steady state**:
   serving trades the corridor-compaction win for hard shape stability and
   zero per-batch host compaction work (the corridor still masks compute
   on device).
-* **Caching.**  A bounded result cache keyed ``(u, v, canonical pattern)``
-  resolves repeats without touching the queue; duplicates *within* a
-  batch collapse onto one plan row set (fan-out at completion).
+* **Caching.**  A bounded result cache keyed ``(u, v, canonical pattern,
+  kind, bound)`` resolves repeats without touching the queue; duplicates
+  *within* a batch collapse onto one plan row set (fan-out at
+  completion).  The kind lives in the key — a boolean hit can never
+  answer a distance query — and the per-index plan-row LRU is
+  partitioned by kind the same way (``tdr_query.pattern_rows``).
+* **Query kinds.**  ``submit(..., kind=...)`` accepts every
+  ``tdr_query.QUERY_KINDS`` member: "bool" batches through
+  ``answer_plan`` as before; "dist" requests batch through
+  ``tdr_query.dist_batch`` grouped by their k-bound (k itself is traced
+  — varying it never recompiles); "witness" and "count" run per request
+  through ``tdr_query.witness`` / ``count_routes``.  All ride the same
+  micro-batching scheduler, warmup pins, and result cache.
 * **Backpressure / admission control.**  The queue is bounded
   (``max_queue``): blocking submits wait for room (closed-loop clients),
   non-blocking submits raise ``QueueFull`` so open-loop front-ends can
@@ -173,15 +183,25 @@ class ServeStats:
         return self.served / self.batches if self.batches else 0.0
 
 
-class _Request:
-    __slots__ = ("u", "v", "pattern", "rkey", "terms", "t_submit", "future")
+#: result-cache miss sentinel: cached values include falsy answers
+#: (witness None is *not* cached-able, dist -1 and count 0 are)
+_MISS = object()
 
-    def __init__(self, u, v, pattern, rkey, terms):
+
+class _Request:
+    __slots__ = ("u", "v", "pattern", "rkey", "terms", "kind", "hops",
+                 "k", "t_submit", "future")
+
+    def __init__(self, u, v, pattern, rkey, terms, kind="bool", hops=8,
+                 k=None):
         self.u = u
         self.v = v
         self.pattern = pattern
         self.rkey = rkey
         self.terms = terms
+        self.kind = kind
+        self.hops = hops
+        self.k = k
         self.t_submit = time.perf_counter()
         self.future: Future = Future()
 
@@ -313,20 +333,38 @@ class QueryServer:
 
     # --------------------------------------------------------------- submit
     def submit(self, u: int, v: int, p: pat.Pattern, *,
+               kind: str = "bool", hops: int = 8, k: int | None = None,
                block: bool = True, timeout: float | None = None) -> Future:
-        """Enqueue one PCR query; the future resolves to ``bool``.
+        """Enqueue one PCR query; the future resolves per ``kind``:
+        bool ("bool"), int hop distance, -1 unreachable ("dist", optional
+        k-hop bound ``k``), an edge-list witness path / [] / None
+        ("witness"), or a saturating walk count over <= ``hops`` hops
+        ("count", single-DNF-term patterns only — rejected here, in the
+        caller's thread, not on the scheduler).
 
         ``block=True`` waits for queue room (backpressure, closed-loop
         clients); ``block=False`` raises ``QueueFull`` immediately when
         the queue is at ``max_queue`` (admission control, open-loop
         front-ends)."""
         cfg = self.config
+        if kind not in tdr_query.QUERY_KINDS:
+            raise ValueError(f"unknown query kind {kind!r}; expected one "
+                             f"of {tdr_query.QUERY_KINDS}")
         # resolving the pattern against the plan cache here (caller's
         # thread) keeps DNF work off the scheduler thread and gives the
         # term count the job-budget coalescer needs
-        rows = tdr_query.pattern_rows(self.index, p, cfg.max_m)
-        rkey = (int(u), int(v), pat.canonical_key(p))
-        req = _Request(int(u), int(v), p, rkey, rows.n_terms)
+        rows = tdr_query.pattern_rows(self.index, p, cfg.max_m, kind=kind)
+        if kind == "count" and rows.n_terms != 1:
+            raise ValueError(
+                f"count queries need a single-DNF-term pattern, got "
+                f"{rows.n_terms} terms")
+        # the answer depends on the kind and its bound, so both live in
+        # the cache key — a boolean hit can never answer a distance query
+        bound = int(hops) if kind == "count" else \
+            (None if k is None else int(k)) if kind == "dist" else None
+        rkey = (int(u), int(v), pat.canonical_key(p), kind, bound)
+        req = _Request(int(u), int(v), p, rkey, rows.n_terms, kind,
+                       int(hops), k)
         with self._lock:
             if self._stopped:
                 # enqueueing into a dead queue would leave the future
@@ -335,8 +373,8 @@ class QueryServer:
                 raise RuntimeError("QueryServer is stopped")
             self.stats.submitted += 1
             if cfg.result_cache:
-                hit = self._results.get(rkey)
-                if hit is not None:
+                hit = self._results.get(rkey, _MISS)
+                if hit is not _MISS:
                     self._results.move_to_end(rkey)
                     self.stats.cache_hits += 1
                     req.future.set_result(hit)
@@ -693,7 +731,7 @@ class QueryServer:
         # every padded replay keeps the same pending content
         probes, jobs = [], 0
         for qi in qstats.exact_qids:
-            u, v, p = sample[qi]
+            u, v, p = sample[qi][:3]
             t = tdr_query.pattern_rows(idx, p, cfg.max_m).n_terms
             if jobs + t > cfg.min_bucket:
                 break
@@ -712,6 +750,26 @@ class QueryServer:
                 special_labels=self._special, pin_m=self._pin_m,
                 pad_lo=cfg.min_bucket)
         self._warmed_to = top
+
+        # pre-compile the non-boolean kinds.  Their executors run at
+        # *fixed* shapes under the serving pins — dist chunks the job
+        # axis to exact_chunk, witness/count are per-query — and their
+        # bounds (k, hops) are traced, so one probe per kind covers
+        # every batch composition live traffic can produce.
+        if probes:
+            u0, v0, p0 = probes[0]
+            common = dict(max_m=cfg.max_m, backend=cfg.backend,
+                          exact_mode=self._kind_mode(), pin_m=self._pin_m)
+            tdr_query.dist_batch(idx, [(u0, v0, p0)], k=1,
+                                 exact_chunk=cfg.exact_chunk,
+                                 special_labels=self._special, **common)
+            tdr_query.witness(idx, u0, v0, p0, **common)
+            for q in probes + list(sample):
+                cu, cv, cp = q[0], q[1], q[2]
+                if len(pat.to_dnf(cp)) == 1:   # count: single-term only
+                    tdr_query.count_routes(idx, cu, cv, cp, hops=1,
+                                           **common)
+                    break
         return engine_mod.jit_cache_entries() - n0
 
     # ------------------------------------------------------------ scheduler
@@ -797,17 +855,17 @@ class QueryServer:
 
     def _serve_batch(self, batch: list[_Request]) -> None:
         """Answer one coalesced batch: dedup → plan-cache compile →
-        ``answer_plan`` → fan results out to futures + result cache."""
+        per-kind executors → fan results out to futures + result cache."""
         cfg = self.config
-        uniq: dict = {}
+        uniq: dict = {}   # rkey -> (u, v, pattern, kind, hops, k)
         fanout: dict = collections.defaultdict(list)
-        cached: list[tuple[_Request, bool]] = []
+        cached: list[tuple[_Request, object]] = []
         jobs_total = 0
         with self._lock:
             for req in batch:
                 if cfg.result_cache:
-                    hit = self._results.get(req.rkey)
-                    if hit is not None:
+                    hit = self._results.get(req.rkey, _MISS)
+                    if hit is not _MISS:
                         self._results.move_to_end(req.rkey)
                         self.stats.cache_hits += 1
                         cached.append((req, hit))
@@ -817,16 +875,15 @@ class QueryServer:
                 else:
                     jobs_total += req.terms
                 fanout[req.rkey].append(req)
-                uniq.setdefault(req.rkey, (req.u, req.v, req.pattern))
+                uniq.setdefault(req.rkey, (req.u, req.v, req.pattern,
+                                           req.kind, req.hops, req.k))
         for req, hit in cached:
             _resolve(req.future, hit)
         if not uniq:
             return
         keys = list(uniq)
-        queries = [uniq[k] for k in keys]
         try:
-            qstats = self.stats.query_stats
-            answers = self._answer(queries, stats=qstats)
+            answers = self._answer_keys(keys, uniq)
         except Exception as exc:  # noqa: BLE001 — surface on the futures
             for k in keys:
                 for req in fanout[k]:
@@ -841,13 +898,54 @@ class QueryServer:
                     > self._warmed_to:
                 self.stats.overflow_batches += 1
             if cfg.result_cache:
-                for k, ans in zip(keys, answers.tolist()):
+                for k in keys:
                     while len(self._results) >= cfg.result_cache:
                         self._results.popitem(last=False)
-                    self._results[k] = ans
-        for k, ans in zip(keys, answers.tolist()):
+                    self._results[k] = answers[k]
+        for k in keys:
             for req in fanout[k]:
-                _resolve(req.future, ans)
+                _resolve(req.future, answers[k])
+
+    def _answer_keys(self, keys: list, uniq: dict) -> dict:
+        """Run every kind's executor over its slice of the unique keys.
+        Bool queries batch through ``answer_plan``; dist queries batch
+        per k-bound (k is traced, so the groups share one compile);
+        witness/count run per query at fixed single-query shapes."""
+        cfg = self.config
+        qstats = self.stats.query_stats
+        out: dict = {}
+        bool_keys = [kk for kk in keys if uniq[kk][3] == "bool"]
+        if bool_keys:
+            ans = self._answer([uniq[kk][:3] for kk in bool_keys],
+                               stats=qstats)
+            out.update(zip(bool_keys, (bool(a) for a in ans)))
+        dist_groups: dict = collections.defaultdict(list)
+        for kk in keys:
+            if uniq[kk][3] == "dist":
+                dist_groups[uniq[kk][5]].append(kk)
+        common = dict(max_m=cfg.max_m, backend=cfg.backend,
+                      exact_mode=self._kind_mode(), pin_m=self._pin_m,
+                      stats=qstats)
+        for kb, group in dist_groups.items():
+            ds = tdr_query.dist_batch(
+                self.index, [uniq[kk][:3] for kk in group], k=kb,
+                exact_chunk=cfg.exact_chunk,
+                special_labels=self._special, **common)
+            out.update(zip(group, (int(d) for d in ds)))
+        for kk in keys:
+            u, v, p, kd, hops, _ = uniq[kk]
+            if kd == "witness":
+                out[kk] = tdr_query.witness(self.index, u, v, p, **common)
+            elif kd == "count":
+                out[kk] = tdr_query.count_routes(self.index, u, v, p,
+                                                 hops=hops, **common)
+        return out
+
+    def _kind_mode(self) -> str:
+        """The non-boolean executors reject "legacy" — fall back to the
+        shape-stable full-graph mode the server defaults to anyway."""
+        return self.config.exact_mode \
+            if self.config.exact_mode != "legacy" else "full"
 
     def _answer(self, queries, stats=None) -> np.ndarray:
         cfg = self.config

@@ -219,6 +219,63 @@ def test_canonicalize_equivalence():
             assert pat.evaluate(p, present) == pat.evaluate(c, present)
 
 
+def test_mixed_kind_load_no_recompile(served_graph):
+    """Satellite contract: after a warmup pool covering every query kind,
+    sustained mixed-kind traffic (bool/dist/witness/count, duplicate and
+    fresh keys alike) adds ZERO jit cache entries — every kind's bucket
+    grid is pinned up front — and every answer equals its oracle.  Also
+    pins the per-kind result-cache key: a dist hit must not serve a bool
+    request for the same (u, v, pattern)."""
+    from repro.core import engine as engine_mod
+
+    g, idx = served_graph
+    pool = _query_pool(g, 23, n=20)
+    single = [q for q in pool if len(pat.to_dnf(q[2])) == 1]
+    with serve.QueryServer(idx, max_wait_ms=1.0, result_cache=64) as srv:
+        srv.warmup(pool)
+        n0 = engine_mod.jit_cache_entries()
+        rng = np.random.default_rng(23)
+        futs = []
+        for i in range(60):
+            u, v, p = pool[int(rng.integers(len(pool)))]
+            kd = ("bool", "dist", "witness")[i % 3]
+            futs.append(((u, v, p, kd), srv.submit(u, v, p, kind=kd)))
+        for (u, v, p) in single[:6]:
+            futs.append(((u, v, p, "count"),
+                         srv.submit(u, v, p, kind="count", hops=4)))
+        for (u, v, p, kd), f in futs:
+            got = f.result(timeout=60)
+            if kd == "bool":
+                assert got == dfs_baseline.answer_pcr(g, u, v, p)
+            elif kd == "dist":
+                assert got == dfs_baseline.shortest_pcr(g, u, v, p)
+            elif kd == "witness":
+                want = dfs_baseline.shortest_pcr(g, u, v, p)
+                if want < 0:
+                    assert got is None
+                else:
+                    assert len(got) == want
+                    assert dfs_baseline.verify_witness(g, u, v, p, got)
+            else:
+                assert got == dfs_baseline.count_routes(
+                    g, u, v, p, hops=4, cap=32767)
+        assert engine_mod.jit_cache_entries() == n0, \
+            "mixed-kind load recompiled after warmup"
+        # result-cache keys carry the kind: same (u,v,p) under two kinds
+        # is two distinct entries with kind-correct answers
+        u, v, p = pool[0]
+        b = srv.submit(u, v, p, kind="bool").result(timeout=60)
+        d = srv.submit(u, v, p, kind="dist").result(timeout=60)
+        assert isinstance(b, (bool, np.bool_)) and isinstance(d, int)
+        assert b == (d >= 0)
+        # count on a multi-term pattern is rejected on the caller thread
+        multi = next(q for q in pool if len(pat.to_dnf(q[2])) > 1)
+        with pytest.raises(ValueError, match="single"):
+            srv.submit(*multi, kind="count", hops=2)
+        with pytest.raises(ValueError, match="kind"):
+            srv.submit(u, v, p, kind="fuzzy")
+
+
 def test_plan_cache_hits(served_graph):
     g, idx = served_graph
     p = pat.all_of([0, 1])

@@ -1,0 +1,69 @@
+"""Lint: the packed-at-rest invariant, greppably enforced.
+
+PR 1 established — and the semiring refactor must preserve — that no
+layer above the engine materializes full-width boolean planes: operands
+are packed uint32 at rest, and the only unpacked transients live inside
+the kernel lowerings and ``bitset.segment_or_words``'s bounded chunks.
+Two call sites give the invariant away when it erodes, so CI greps for
+them:
+
+* ``bitset.segment_or(`` — the boolean-plane-*input* reference
+  reduction.  It survives solely as a test oracle; any runtime module
+  calling it is unpacking a plane.  Allowed only in its home module
+  (``src/repro/core/bitset.py``), ``tests/`` and ``attic/``.
+
+* ``unpack_bits(`` — the full-width jax unpacker.  Allowed in the
+  kernel lowerings (``src/repro/kernels/``: the mxu/ref/block-sparse
+  paths unpack *tiles* inside a kernel body), its home module, tests
+  and attic.  Everything above the kernels must stay packed.
+
+    python tools/lint_boolplanes.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+RULES = [
+    # (pattern, allowed path prefixes, message)
+    (re.compile(r"\bsegment_or\((?!\w)"),
+     ("src/repro/core/bitset.py", "tests/", "attic/"),
+     "bitset.segment_or is a test-only boolean-plane oracle; runtime "
+     "code must use segment_or_words (packed) or a Semiring"),
+    (re.compile(r"\bunpack_bits\("),
+     ("src/repro/core/bitset.py", "src/repro/kernels/", "tests/",
+      "attic/"),
+     "full-width unpack_bits outside the kernel layer breaks the "
+     "packed-at-rest invariant"),
+]
+
+
+def main() -> int:
+    failures = []
+    checked = 0
+    for path in sorted(ROOT.rglob("*.py")):
+        rel = path.relative_to(ROOT).as_posix()
+        if rel.startswith((".git/", "tools/")):
+            continue
+        checked += 1
+        text = path.read_text()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for rx, allowed, msg in RULES:
+                if rx.search(line) and not rel.startswith(allowed):
+                    failures.append(f"{rel}:{lineno}: {line.strip()}"
+                                    f"\n    -> {msg}")
+    if failures:
+        print(f"packed-plane lint FAILED ({len(failures)} hit(s)):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"packed-plane lint: {checked} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

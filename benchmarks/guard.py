@@ -1,7 +1,7 @@
-"""tableIII + tableIV + serving + recovery regression guard for CI.
+"""tableIII + tableIV + serving + fleet + recovery regression guard.
 
-Re-runs the tableIII, tableIV, serving and recovery smoke benchmarks and
-compares
+Re-runs the tableIII, tableIV, serving, fleet and recovery smoke
+benchmarks and compares
 each gated row's ``us_per_call`` against the committed rows in
 ``BENCH_queries.json`` (the newest ``pr`` generation per (name,
 backend)).  Gated rows are the reachable-query (``*-true``) tableIII
@@ -10,9 +10,14 @@ rows, the serving closed-loop p95-latency row
 (``*/index-bytes`` — build time drift-normalized like every timing row,
 plus ``compressed_bytes`` compared *directly*: bytes are deterministic,
 so a >``--factor`` growth of the compressed index fails without any
-drift allowance), the sparse-closure rows (``*closure*-sparse``), and
-the snapshot-restore row (``recovery/*/restore`` — restore must stay
-cheap relative to rebuild; the ≥5x contract itself asserts in-module).
+drift allowance), the sparse-closure rows (``*closure*-sparse``), the
+snapshot-restore row (``recovery/*/restore`` — restore must stay
+cheap relative to rebuild; the ≥5x contract itself asserts in-module),
+and the replicated-fleet closed-loop rows
+(``serving/fleet/n*/closed-p95`` — same ``/closed-p95`` gate +
+``SERVING_SLACK``, plus a cross-row check that N=2 replicas beat the
+N=1 throughput on hosts where scaling is demonstrable; single-core or
+pallas-interpret legs carry ``"gated": false`` on the rows).
 Timing rows are DFS-normalized with the same drift factor (the serving
 row gets ``SERVING_SLACK`` on top: concurrent-client queueing latency is
 far noisier than single-thread us/call, and its tight contract lives in
@@ -104,9 +109,9 @@ def check(baseline_path: str, backends: list, factor: float,
     best: dict = {}
     order = []
     for _ in range(max(passes, 1)):
-        for rec in run_mod.collect(scale,
-                                   only="tableIII,tableIV,serving,recovery",
-                                   backends=backends):
+        for rec in run_mod.collect(
+                scale, only="tableIII,tableIV,serving,fleet,recovery",
+                backends=backends):
             key = (rec["name"], rec["backend"])
             if key not in best:
                 order.append(key)
@@ -181,6 +186,24 @@ def check(baseline_path: str, backends: list, factor: float,
             verdict = "info"
         print(f"{rec['name']},{rec['backend']},{rec['us_per_call']},"
               f"{committed},{allowed:.1f},{verdict}")
+
+    # fleet replica-scaling floor: where both generations ran gated
+    # (multi-core host, real kernels — the rows themselves carry
+    # ``gated: false`` otherwise), fresh N=2 throughput must beat the
+    # N=1 floor; the in-module assert enforces the 1.1x contract, this
+    # cross-row check just refuses a silently flat-scaled fresh run
+    for be in {r["backend"] for r in fresh}:
+        by_n = {n: best.get((f"serving/fleet/n{n}/closed-p95", be))
+                for n in (1, 2)}
+        if all(by_n.values()) and all(
+                r.get("gated", True) is not False for r in by_n.values()):
+            q1 = _derived_field(by_n[1]["derived"], "qps")
+            q2 = _derived_field(by_n[2]["derived"], "qps")
+            compared += 1
+            if q1 and q2 and q2 <= q1:
+                failures.append(
+                    f"fleet[{be}]: n=2 replicas ({q2:.0f} q/s) did not "
+                    f"beat n=1 ({q1:.0f} q/s)")
 
     if not compared:
         # e.g. a row rename detached every fresh row from the baseline —

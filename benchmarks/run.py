@@ -24,8 +24,9 @@ import json
 
 from repro.core import engine as engine_mod
 
-from . import (common, index_cost, kernels_bench, lcr_bench, queries,
-               recovery, scalability, serving, synthetic_sweeps, updates)
+from . import (common, fleet, index_cost, kernels_bench, lcr_bench,
+               queries, recovery, scalability, serving, synthetic_sweeps,
+               updates)
 
 MODULES = [
     ("tableIII", queries),
@@ -35,21 +36,29 @@ MODULES = [
     ("fig6", scalability),
     ("kernels", kernels_bench),
     ("serving", serving),
+    ("fleet", fleet),
     ("updates", updates),
     ("recovery", recovery),
 ]
 
 
-def collect(scale: str, only: str = "", backends: list | None = None) -> list:
+def collect(scale: str, only: str = "", backends: list | None = None,
+            skip: str = "") -> list:
     """Run the selected modules; returns records (dicts, one per CSV row).
 
-    ``only`` is a comma-separated list of substrings matched against the
-    module names; ``backends`` sweeps engine backends where supported.
+    ``only``/``skip`` are comma-separated lists of substrings matched
+    against the module names (skip wins — e.g. the nightly full run
+    excludes the multi-process ``fleet`` module, which has its own
+    saturation job); ``backends`` sweeps engine backends where
+    supported.
     """
     tokens = [t for t in (only or "").split(",") if t]
+    skips = [t for t in (skip or "").split(",") if t]
     records = []
     for name, mod in MODULES:
         if tokens and not any(t in name for t in tokens):
+            continue
+        if any(t in name for t in skips):
             continue
         supports = "backend" in inspect.signature(mod.run).parameters
         sweep = (backends or [None]) if supports else [None]
@@ -84,6 +93,9 @@ def main() -> None:
                     choices=sorted(common.SCALES))
     ap.add_argument("--only", default="",
                     help="comma-separated substrings of module names")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated substrings of module names "
+                         "to exclude (applied after --only)")
     ap.add_argument("--backends", default="",
                     help="comma-separated engine backends to sweep "
                          "(e.g. segment,pallas); default: engine default")
@@ -92,7 +104,7 @@ def main() -> None:
     args = ap.parse_args()
 
     backends = [b for b in args.backends.split(",") if b] or None
-    records = collect(args.scale, args.only, backends)
+    records = collect(args.scale, args.only, backends, skip=args.skip)
 
     print("name,us_per_call,backend,derived")
     for r in records:

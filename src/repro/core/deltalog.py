@@ -33,6 +33,12 @@ which is bit-identical to a layout-pinned rebuild of the final graph
   has folded in (compaction), atomically.
 * **fsync'd.**  Every append flushes and fsyncs before returning, so an
   acked update survives the process.
+* **Multi-reader tailing.**  ``LogReader`` gives other *processes* a
+  read-only cursor over the same file: replicas of a serving fleet tail
+  the log a single writer appends to, each yielding exactly the records
+  a recovering writer would replay as committed (torn in-flight appends
+  are never yielded), and surviving ``truncate_upto`` compaction as
+  long as their cursor is at or past the compaction point.
 
 ``append``/``replay`` speak ``(added, removed)`` int64 ``[N, 3]`` edge
 arrays — exactly the effective-delta form of ``graph.GraphDelta``.
@@ -61,6 +67,12 @@ _FSYNC = os.fsync
 class LogCorrupt(RuntimeError):
     """A complete log record failed framing/CRC validation (bit rot,
     overwrite, or interleaved garbage) — replay must not proceed."""
+
+
+class LogCompactedPast(RuntimeError):
+    """A reader's cursor fell behind ``truncate_upto`` compaction: the
+    records it still needs no longer exist.  The reader must
+    re-bootstrap from a snapshot at or past the log's new base LSN."""
 
 
 def _crc(data: bytes) -> int:
@@ -305,3 +317,128 @@ class DeltaLog:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class LogReader:
+    """Read-only tailing cursor over a ``DeltaLog`` file — the
+    multi-process counterpart of ``DeltaLog.replay`` for replicas that
+    follow a log another process is appending to.
+
+    The reader never mutates the file: it re-reads and re-validates on
+    every ``poll`` (logs stay small under compaction, so the simplicity
+    is worth the O(file) scan) and yields exactly the records a
+    recovering *writer* would replay as committed:
+
+    * A record is yielded only once its framing and both CRCs validate
+      and its LSN extends the dense sequence — the same acceptance rule
+      as ``DeltaLog._scan``.
+    * A **torn tail** (a record the writer is still appending, or that a
+      writer crash left half-written) is never yielded: an incomplete
+      header, a CRC-trusted length running past EOF, or a payload-CRC
+      failure *at end of file* all read as "in progress" and the poll
+      simply stops there.  A payload-CRC failure with further bytes
+      behind it cannot be an in-flight append and raises ``LogCorrupt``.
+    * **Compaction-safe.**  ``truncate_upto`` atomically replaces the
+      file; the reader detects the new base LSN and resumes at its
+      cursor — records above the compaction point are yielded exactly
+      once.  If compaction advanced *past* the cursor the needed records
+      are gone and ``poll`` raises ``LogCompactedPast`` (re-bootstrap
+      from a snapshot).
+    * A log whose tip *retreated* below the cursor with the same base
+      (the writer rolled back via ``pop_tail`` a record this reader
+      already consumed) raises ``LogCorrupt`` — single-writer fleets
+      must treat ``append`` as commit for reader correctness.
+
+    ``seek(after_lsn)`` repositions the cursor (e.g. to re-deliver a
+    record whose apply failed)."""
+
+    def __init__(self, path: str, *, after_lsn: int = 0):
+        self.path = path
+        self.lsn = int(after_lsn)   # last consumed LSN (cursor)
+        self.base_lsn = 0
+        self.last_seen_lsn = 0      # log tip observed by the last poll
+        self._probe()               # validate header + learn base_lsn
+
+    def _probe(self) -> None:
+        """Validate the file header and refresh ``base_lsn`` without
+        touching the cursor — safe on a log compacted past the cursor
+        (callers pick a snapshot >= ``base_lsn``, then ``seek``)."""
+        with open(self.path, "rb") as f:
+            head = f.read(len(FILE_MAGIC) + _FHEAD.size)
+        if len(head) < len(FILE_MAGIC) + _FHEAD.size:
+            raise LogCorrupt("log file shorter than its header")
+        if head[:len(FILE_MAGIC)] != FILE_MAGIC:
+            raise LogCorrupt("bad magic: not a TDR delta log")
+        base, bcrc = _FHEAD.unpack_from(head, len(FILE_MAGIC))
+        if bcrc != _crc(struct.pack("<Q", base)):
+            raise LogCorrupt("log base-LSN header failed its CRC")
+        self.base_lsn = int(base)
+
+    def seek(self, after_lsn: int) -> None:
+        """Reposition the cursor: the next ``poll`` re-delivers records
+        with LSN > ``after_lsn``."""
+        self.lsn = int(after_lsn)
+
+    def poll(self, max_records: int | None = None
+             ) -> list[tuple[int, np.ndarray, np.ndarray]]:
+        """Return ``(lsn, added, removed)`` for every durable record
+        beyond the cursor (possibly none), advancing the cursor past
+        what is returned."""
+        with open(self.path, "rb") as f:
+            data = f.read()
+        hdr_len = len(FILE_MAGIC) + _FHEAD.size
+        if len(data) < hdr_len:
+            raise LogCorrupt("log file shorter than its header")
+        if data[:len(FILE_MAGIC)] != FILE_MAGIC:
+            raise LogCorrupt("bad magic: not a TDR delta log")
+        base, bcrc = _FHEAD.unpack_from(data, len(FILE_MAGIC))
+        if bcrc != _crc(struct.pack("<Q", base)):
+            raise LogCorrupt("log base-LSN header failed its CRC")
+        self.base_lsn = int(base)
+        if base > self.lsn:
+            raise LogCompactedPast(
+                f"log compacted to base {base} past reader cursor "
+                f"{self.lsn}")
+        out: list[tuple[int, np.ndarray, np.ndarray]] = []
+        pos = hdr_len
+        prev = int(base)
+        while pos < len(data):
+            remaining = len(data) - pos
+            if remaining < _HEAD.size:
+                break   # in-flight append: torn header
+            magic, hcrc, lsn, plen, pcrc = _HEAD.unpack_from(data, pos)
+            if magic != REC_MAGIC:
+                raise LogCorrupt(
+                    f"record at offset {pos}: bad record magic")
+            if hcrc != _head_crc(lsn, plen):
+                raise LogCorrupt(
+                    f"record at offset {pos}: header failed its CRC")
+            end = pos + _HEAD.size + plen
+            if end > len(data):
+                break   # in-flight append: torn payload
+            payload = data[pos + _HEAD.size:end]
+            if _crc(payload) != pcrc:
+                if end == len(data):
+                    # contents may lag the visible file length while the
+                    # writer's single append is still landing — wait
+                    break
+                raise LogCorrupt(
+                    f"record lsn={lsn} at offset {pos}: payload failed "
+                    f"its CRC mid-log")
+            if lsn != prev + 1:
+                raise LogCorrupt(
+                    f"record at offset {pos}: LSN {lsn} after {prev} "
+                    f"(log must be dense and increasing)")
+            prev = int(lsn)
+            if lsn > self.lsn and \
+                    (max_records is None or len(out) < max_records):
+                out.append((int(lsn), *_decode_payload(payload)))
+            pos = end
+        if prev < self.lsn:
+            raise LogCorrupt(
+                f"log tip {prev} retreated below reader cursor "
+                f"{self.lsn} (pop_tail under an active reader?)")
+        self.last_seen_lsn = prev
+        if out:
+            self.lsn = out[-1][0]
+        return out

@@ -184,6 +184,21 @@ def canonical_key(p: Pattern) -> str:
     return _canon(p)[1]
 
 
+def unparse(p: Pattern) -> str:
+    """Render ``p`` as infix text that ``parse`` accepts —
+    ``parse(unparse(p))`` is structurally equal to ``p`` up to
+    canonicalization, which is what wire protocols (the fleet's
+    replica pipes) need to ship patterns between processes."""
+    if isinstance(p, Label):
+        return f"l{p.index}"
+    if isinstance(p, Not):
+        return f"!({unparse(p.child)})"
+    if isinstance(p, (And, Or)):
+        sep = " & " if isinstance(p, And) else " | "
+        return "(" + sep.join(unparse(c) for c in p.children) + ")"
+    raise TypeError(p)
+
+
 # ---------------------------------------------------------------- parser
 def parse(text: str) -> Pattern:
     """Parse ``"0 & !(1 | 2)"`` / ``"l0 AND NOT (l1 OR l2)"`` into an AST."""

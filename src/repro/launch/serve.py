@@ -190,10 +190,10 @@ _MISS = object()
 
 class _Request:
     __slots__ = ("u", "v", "pattern", "rkey", "terms", "kind", "hops",
-                 "k", "t_submit", "future")
+                 "k", "with_lsn", "t_submit", "future")
 
     def __init__(self, u, v, pattern, rkey, terms, kind="bool", hops=8,
-                 k=None):
+                 k=None, with_lsn=False):
         self.u = u
         self.v = v
         self.pattern = pattern
@@ -202,6 +202,7 @@ class _Request:
         self.kind = kind
         self.hops = hops
         self.k = k
+        self.with_lsn = with_lsn
         self.t_submit = time.perf_counter()
         self.future: Future = Future()
 
@@ -280,6 +281,15 @@ class QueryServer:
         self._log: "deltalog_mod.DeltaLog | None" = None
         self._persist_dir: str | None = None
         self._updates_since_snap = 0
+        # replication state — attached by follow(): a read-only tailing
+        # cursor over a log some *other* process appends to, plus the
+        # maintenance thread applying what it yields.  _applied_cond
+        # broadcasts every applied_lsn advance (wait_for_lsn).
+        self._reader: "deltalog_mod.LogReader | None" = None
+        self._poll_s = 0.05
+        self._following = False
+        self._tail_thread: threading.Thread | None = None
+        self._applied_cond = threading.Condition(self._lock)
 
     def memory_stats(self) -> dict:
         """Resident index footprint: per-plane dense vs compressed bytes
@@ -296,12 +306,25 @@ class QueryServer:
         self._thread = threading.Thread(target=self._loop,
                                         name="tdr-serve", daemon=True)
         self._thread.start()
+        if self._reader is not None and self._tail_thread is None:
+            # follower replica: tail the shared log alongside serving
+            self._following = True
+            self._tail_thread = threading.Thread(
+                target=self._tail_loop, name="tdr-follow", daemon=True)
+            self._tail_thread.start()
         return self
 
     def stop(self, drain: bool = True) -> None:
         """Stop the scheduler.  ``drain`` serves whatever is queued first;
         otherwise queued futures are cancelled.  Later ``submit`` calls
         raise (their futures could never resolve) until ``start`` again."""
+        tail = self._tail_thread
+        if tail is not None:
+            # stop tailing first, while the scheduler is still alive to
+            # process any barrier the tail thread is waiting on
+            self._following = False
+            tail.join()
+            self._tail_thread = None
         thread = self._thread
         if thread is None:
             return
@@ -334,7 +357,8 @@ class QueryServer:
     # --------------------------------------------------------------- submit
     def submit(self, u: int, v: int, p: pat.Pattern, *,
                kind: str = "bool", hops: int = 8, k: int | None = None,
-               block: bool = True, timeout: float | None = None) -> Future:
+               block: bool = True, timeout: float | None = None,
+               with_lsn: bool = False) -> Future:
         """Enqueue one PCR query; the future resolves per ``kind``:
         bool ("bool"), int hop distance, -1 unreachable ("dist", optional
         k-hop bound ``k``), an edge-list witness path / [] / None
@@ -345,7 +369,13 @@ class QueryServer:
         ``block=True`` waits for queue room (backpressure, closed-loop
         clients); ``block=False`` raises ``QueueFull`` immediately when
         the queue is at ``max_queue`` (admission control, open-loop
-        front-ends)."""
+        front-ends).
+
+        ``with_lsn=True`` resolves the future to ``(answer, lsn)``
+        instead — the ``applied_lsn`` of the index the answer was
+        computed against (exact: no batch straddles an index swap, and
+        the result cache is dropped at every swap).  Fleet replicas use
+        this to stamp each answer with its read LSN."""
         cfg = self.config
         if kind not in tdr_query.QUERY_KINDS:
             raise ValueError(f"unknown query kind {kind!r}; expected one "
@@ -364,7 +394,7 @@ class QueryServer:
             (None if k is None else int(k)) if kind == "dist" else None
         rkey = (int(u), int(v), pat.canonical_key(p), kind, bound)
         req = _Request(int(u), int(v), p, rkey, rows.n_terms, kind,
-                       int(hops), k)
+                       int(hops), k, with_lsn)
         with self._lock:
             if self._stopped:
                 # enqueueing into a dead queue would leave the future
@@ -377,7 +407,12 @@ class QueryServer:
                 if hit is not _MISS:
                     self._results.move_to_end(rkey)
                     self.stats.cache_hits += 1
-                    req.future.set_result(hit)
+                    # cached answers are valid for the *current* index
+                    # (the cache is cleared at every swap), so the
+                    # current applied_lsn is an exact read LSN
+                    req.future.set_result(
+                        (hit, self.stats.applied_lsn) if with_lsn
+                        else hit)
                     return req.future
             deadline = None if timeout is None else \
                 time.perf_counter() + timeout
@@ -432,6 +467,10 @@ class QueryServer:
         keeps answering reads on the last-good index
         (``ServeStats.degraded``)."""
         cfg = self.config
+        if self._reader is not None:
+            raise RuntimeError(
+                "follower replicas apply updates from the shared log; "
+                "publish through the fleet writer instead")
         st = tdr_build.UpdateStats()
         with self._update_lock:
             # self.index is stable here: it only changes at *our* barrier
@@ -557,6 +596,17 @@ class QueryServer:
         self.stats.degraded = False
         if lsn is not None:
             self.stats.applied_lsn = lsn
+            self._applied_cond.notify_all()
+
+    def wait_for_lsn(self, lsn: int, timeout: float | None = None) -> bool:
+        """Block until the served index reflects log position ``lsn``
+        (``applied_lsn >= lsn``); False on timeout.  The replica-side
+        half of a consistent read: the router picks a replica believed
+        caught up, the replica holds the query here if its heartbeat
+        was stale."""
+        with self._lock:
+            return self._applied_cond.wait_for(
+                lambda: self.stats.applied_lsn >= lsn, timeout)
 
     # ----------------------------------------------------------- durability
     def persist_to(self, directory: str) -> int:
@@ -605,27 +655,8 @@ class QueryServer:
             raise RecoveryError(f"no snapshots in {directory!r}")
         log = deltalog_mod.DeltaLog(os.path.join(directory, LOG_NAME))
         try:
-            idx = None
-            problems = []
-            for _, path in reversed(snaps):   # newest first
-                try:
-                    idx, snap_lsn = snapshot_mod.load_index(path)
-                except snapshot_mod.SnapshotError as exc:
-                    problems.append(f"{os.path.basename(path)}: {exc}")
-                    continue
-                if snap_lsn < log.base_lsn:
-                    # the log was compacted past this snapshot — records
-                    # it needs no longer exist, it cannot seed a replay
-                    problems.append(
-                        f"{os.path.basename(path)}: snapshot lsn "
-                        f"{snap_lsn} predates compacted log base "
-                        f"{log.base_lsn}")
-                    idx = None
-                    continue
-                break
-            if idx is None:
-                raise RecoveryError(
-                    "no usable snapshot: " + "; ".join(problems))
+            idx, snap_lsn = cls._newest_valid_snapshot(directory,
+                                                       log.base_lsn)
             applied = snap_lsn
             for lsn, added, removed in log.replay(after_lsn=snap_lsn):
                 delta = idx.graph.apply_updates(added, removed)
@@ -641,6 +672,176 @@ class QueryServer:
         server._persist_dir = directory
         server.stats.applied_lsn = applied
         return server
+
+    @staticmethod
+    def _newest_valid_snapshot(directory: str, min_lsn: int):
+        """``(index, lsn)`` from the newest snapshot that validates and
+        sits at or past ``min_lsn`` (the log's base — an older snapshot
+        cannot bridge a compacted log).  Falls back across snapshots on
+        ``SnapshotError``; raises ``RecoveryError`` when none works."""
+        snaps = _snapshot_files(directory) if os.path.isdir(directory) \
+            else []
+        if not snaps:
+            raise RecoveryError(f"no snapshots in {directory!r}")
+        problems = []
+        for _, path in reversed(snaps):   # newest first
+            try:
+                idx, snap_lsn = snapshot_mod.load_index(path)
+            except snapshot_mod.SnapshotError as exc:
+                problems.append(f"{os.path.basename(path)}: {exc}")
+                continue
+            if snap_lsn < min_lsn:
+                # the log was compacted past this snapshot — records it
+                # needs no longer exist, it cannot seed a replay
+                problems.append(
+                    f"{os.path.basename(path)}: snapshot lsn {snap_lsn} "
+                    f"predates compacted log base {min_lsn}")
+                continue
+            return idx, snap_lsn
+        raise RecoveryError("no usable snapshot: " + "; ".join(problems))
+
+    # ---------------------------------------------------------- follower
+    @classmethod
+    def follow(cls, directory: str, config: ServeConfig | None = None,
+               *, poll_s: float = 0.05, **overrides) -> "QueryServer":
+        """Bootstrap a read replica over a *shared* persist directory:
+        restore the newest valid snapshot, replay the delta log behind
+        it through a read-only ``deltalog.LogReader``, and return a
+        stopped server whose ``start()`` both serves queries and keeps
+        tailing the log (polling every ``poll_s``) — each new record a
+        single writer appends is applied through ``update_index`` behind
+        the usual quiesce barrier, and ``ServeStats.applied_lsn``
+        advertises the replica's log position for router placement.
+
+        The replica never writes to the shared store: ``submit_update``
+        is refused (updates flow writer → log → every replica), and
+        compaction by the writer is survived by re-bootstrapping from
+        the newest snapshot when the log base passes the cursor."""
+        cfg = config or ServeConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        reader = deltalog_mod.LogReader(
+            os.path.join(directory, LOG_NAME))
+        idx, applied = cls._bootstrap_replica(directory, cfg, reader)
+        server = cls(idx, cfg)
+        server._reader = reader
+        server._persist_dir = directory
+        server._poll_s = poll_s
+        server.stats.applied_lsn = applied
+        return server
+
+    @classmethod
+    def _bootstrap_replica(cls, directory: str, cfg: ServeConfig,
+                           reader: "deltalog_mod.LogReader"):
+        """Newest valid snapshot at/past the log base, plus a replay of
+        the reader to the current tip.  Returns ``(index, applied_lsn)``
+        with the reader's cursor left at ``applied_lsn``."""
+        idx, snap_lsn = cls._newest_valid_snapshot(directory,
+                                                   reader.base_lsn)
+        reader.seek(snap_lsn)
+        applied = snap_lsn
+        while True:
+            recs = reader.poll()
+            if not recs:
+                return idx, applied
+            for lsn, added, removed in recs:
+                delta = idx.graph.apply_updates(added, removed)
+                idx = tdr_build.update_index(
+                    idx, delta, backend=cfg.backend,
+                    rebuild_threshold=cfg.update_rebuild_threshold)
+                applied = lsn
+
+    def _tail_loop(self) -> None:
+        """Follower maintenance thread: poll the shared log, apply each
+        new record behind a barrier.  Failures never kill the thread —
+        the replica flips ``ServeStats.degraded``, keeps answering reads
+        from the last-good index, and retries (the record is re-delivered
+        by rewinding the cursor), exactly the submit_update degraded-mode
+        contract in replicated form."""
+        err_sleep = min(1.0, 10 * self._poll_s)
+        while self._following:
+            try:
+                recs = self._reader.poll()
+            except deltalog_mod.LogCompactedPast:
+                # the writer compacted past our cursor: the records we
+                # need are gone — re-bootstrap from the newest snapshot
+                try:
+                    self._refollow()
+                except Exception:
+                    with self._lock:
+                        self.stats.degraded = True
+                    time.sleep(err_sleep)
+                continue
+            except Exception:
+                with self._lock:
+                    self.stats.degraded = True
+                time.sleep(err_sleep)
+                continue
+            applied_all = True
+            for lsn, added, removed in recs:
+                if not self._following:
+                    return
+                try:
+                    if not self._apply_replicated(lsn, added, removed):
+                        return   # scheduler is shutting down
+                except Exception:
+                    # rewind so the record is re-delivered next poll
+                    self._reader.seek(lsn - 1)
+                    with self._lock:
+                        self.stats.degraded = True
+                        self.stats.update_failures += 1
+                    applied_all = False
+                    time.sleep(err_sleep)
+                    break
+            if not recs and applied_all:
+                time.sleep(self._poll_s)
+
+    def _apply_replicated(self, lsn: int, added, removed) -> bool:
+        """Apply one shared-log record on a follower: the maintenance +
+        barrier machinery of ``submit_update`` minus the write-ahead
+        append (the record came *from* the log — it is already durable).
+        False when the server is stopping underneath us."""
+        cfg = self.config
+        with self._update_lock:
+            if lsn <= self.stats.applied_lsn:
+                return True   # overlap after a snapshot re-bootstrap
+            delta = self.index.graph.apply_updates(added, removed)
+            new_idx = self._with_retries(
+                lambda: tdr_build.update_index(
+                    self.index, delta, backend=cfg.backend,
+                    rebuild_threshold=cfg.update_rebuild_threshold))
+            return self._swap_in(new_idx, lsn)
+
+    def _refollow(self) -> None:
+        """Recover from ``LogCompactedPast``: rebuild the served state
+        from the newest snapshot + log replay and swap it in as one
+        barriered update (the reader's cursor lands on the new tip)."""
+        cfg = self.config
+        with self._update_lock:
+            idx, applied = self._bootstrap_replica(self._persist_dir,
+                                                   cfg, self._reader)
+            if applied > self.stats.applied_lsn:
+                self._swap_in(idx, applied)
+
+    def _swap_in(self, new_idx, lsn: int) -> bool:
+        """Swap ``new_idx`` in at ``lsn`` through the scheduler barrier
+        (inline when no scheduler runs); caller holds ``_update_lock``.
+        False when the scheduler died before reaching the barrier."""
+        bar = _UpdateBarrier(new_idx, lsn)
+        with self._lock:
+            if self._thread is None:
+                self.index = new_idx
+                self._results.clear()
+                self._note_applied(lsn)
+                return True
+            self._queue.append(bar)
+            self._not_empty.notify()
+        bar.event.wait()
+        if bar.exc is not None:
+            return False
+        with self._lock:
+            self._note_applied(lsn)
+        return True
 
     def checkpoint(self) -> int:
         """Snapshot the currently served index and compact the delta log
@@ -797,6 +998,7 @@ class QueryServer:
                         self._results.clear()
                         if batch.lsn is not None:
                             self.stats.applied_lsn = batch.lsn
+                            self._applied_cond.notify_all()
                 batch.event.set()
                 continue
             if batch:
@@ -862,6 +1064,10 @@ class QueryServer:
         cached: list[tuple[_Request, object]] = []
         jobs_total = 0
         with self._lock:
+            # the whole batch is served against self.index as of here —
+            # swaps happen only on this (scheduler) thread, so this LSN
+            # is the exact read position of every answer below
+            lsn = self.stats.applied_lsn
             for req in batch:
                 if cfg.result_cache:
                     hit = self._results.get(req.rkey, _MISS)
@@ -878,7 +1084,7 @@ class QueryServer:
                 uniq.setdefault(req.rkey, (req.u, req.v, req.pattern,
                                            req.kind, req.hops, req.k))
         for req, hit in cached:
-            _resolve(req.future, hit)
+            _resolve(req.future, (hit, lsn) if req.with_lsn else hit)
         if not uniq:
             return
         keys = list(uniq)
@@ -904,7 +1110,9 @@ class QueryServer:
                     self._results[k] = answers[k]
         for k in keys:
             for req in fanout[k]:
-                _resolve(req.future, answers[k])
+                _resolve(req.future,
+                         (answers[k], lsn) if req.with_lsn
+                         else answers[k])
 
     def _answer_keys(self, keys: list, uniq: dict) -> dict:
         """Run every kind's executor over its slice of the unique keys.

@@ -1,0 +1,250 @@
+"""Standalone replicated-fleet fault smoke (NOT collected by pytest
+directly — ``tests/test_fleet.py`` spawns it as a slow test, and the CI
+``fleet`` job runs it as its own leg).
+
+One shared store, a router over **3 replica processes**, and a single
+writer publishing a *deterministic* update stream, so the graph as of
+every LSN is known in the parent.  Three legs per backend:
+
+1. **Replica SIGKILL mid-stream** — queries are submitted continuously
+   while the writer publishes; one replica is SIGKILLed with requests
+   in flight.  Every answer (re-dispatched or not) must equal the DFS
+   oracle *at its read LSN* — zero wrong answers — and the fleet must
+   evict and re-spawn the victim.
+2. **Consistent reads at a pinned LSN** — answers routed with
+   ``min_lsn=L`` carry ``lsn >= L`` and are bit-identical to a single
+   caught-up in-process follower (``QueryServer.follow``) asked the
+   same questions.
+3. **Writer SIGKILL** — a writer subprocess is SIGKILLed mid-publish; a
+   new ``FleetWriter`` attaches to the store (torn tail truncated, as
+   single-process recovery would), resumes the stream, and the replicas
+   keep serving oracle-correct answers through the hand-off.
+
+Run directly (both backends)::
+
+    PYTHONPATH=src python tests/fleet_check.py
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import numpy as np  # noqa: E402
+
+from repro.core import dfs_baseline, graph as G  # noqa: E402
+from repro.core import pattern as pat, tdr_build  # noqa: E402
+from repro.launch import fleet as fleet_mod, serve  # noqa: E402
+from repro.launch.router import FleetRouter  # noqa: E402
+
+CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
+N_V, N_L, N_STEPS = 24, 4, 24
+N_REPLICAS = 3
+
+
+def make_plan(seed: int):
+    """Deterministic update stream: ``graphs[k]`` is the graph with the
+    first ``k`` published updates applied — identical everywhere."""
+    g = G.random_graph("er", N_V, 2.0, N_L, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    graphs, steps = [g], []
+    for _ in range(N_STEPS):
+        cur = graphs[-1]
+        edges = list(zip(cur.src.tolist(), cur.indices.tolist(),
+                         cur.labels.tolist()))
+        add, rem = [], []
+        for _ in range(int(rng.integers(1, 4))):
+            kind = int(rng.integers(3))
+            if kind <= 1 or not edges:
+                u, v = int(rng.integers(N_V)), int(rng.integers(N_V))
+                if u != v:
+                    add.append((u, v, int(rng.integers(N_L))))
+            else:
+                rem.append(edges[int(rng.integers(len(edges)))])
+        steps.append((add, rem))
+        graphs.append(cur.apply_updates(add, rem).graph)
+    return graphs, steps
+
+
+def query_pool(seed: int, n: int = 8):
+    rng = np.random.default_rng(seed + 2)
+    qs = []
+    for i in range(n):
+        u, v = int(rng.integers(N_V)), int(rng.integers(N_V))
+        labs = rng.choice(N_L, size=2, replace=False).tolist()
+        p = [pat.all_of(labs), pat.any_of(labs), pat.none_of(labs),
+             pat.parse(f"l{labs[0]} & !l{labs[1]}")][i % 4]
+        qs.append((u, v, p))
+    return qs
+
+
+def check_at_lsn(graphs, u, v, p, ans, lsn, ctx):
+    want = dfs_baseline.answer_pcr(graphs[lsn], u, v, p)
+    assert ans == want, \
+        f"{ctx}: ({u},{v},{pat.unparse(p)}) at lsn={lsn}: " \
+        f"got {ans!r}, oracle {want!r}"
+
+
+def writer_worker(directory: str, seed: int, first_step: int) -> None:
+    """Leg-3 subprocess body: attach a writer and publish the tail of
+    the deterministic stream, printing each acked LSN.  The parent
+    SIGKILLs us mid-stream — no cleanup of any kind runs."""
+    _, steps = make_plan(seed)
+    w = fleet_mod.FleetWriter(directory)
+    print("READY", flush=True)
+    for add, rem in steps[first_step:]:
+        lsn = w.publish(add, rem)
+        print(f"LSN {lsn}", flush=True)
+        time.sleep(0.05)
+    print("DONE", flush=True)
+
+
+def leg_replica_kill(router, flt, writer, graphs, steps, qs, n_pub):
+    """Publish ``n_pub`` updates while streaming queries; SIGKILL one
+    replica with requests in flight.  Zero wrong answers allowed."""
+    ev0, rs0 = flt.evictions, flt.respawns
+    results = []   # (u, v, p, future)
+    victim = flt.members()[0]
+    for j in range(n_pub):
+        writer.publish(*steps[writer.last_lsn])
+        for u, v, p in qs:
+            results.append((u, v, p, router.submit(u, v, p)))
+        if j == n_pub // 2:
+            victim.kill()   # mid-stream, answers in flight
+    for u, v, p in qs:     # post-kill traffic
+        results.append((u, v, p,
+                        router.submit(u, v, p, min_lsn=writer.last_lsn,
+                                      lsn_timeout=240)))
+    for u, v, p, f in results:
+        ans, lsn = f.result(timeout=300)
+        check_at_lsn(graphs, u, v, p, ans, lsn, "replica-kill")
+    deadline = time.monotonic() + 120
+    while len(flt.members()) < N_REPLICAS:
+        assert time.monotonic() < deadline, "re-spawn never became ready"
+        time.sleep(0.1)
+    assert flt.evictions > ev0, "victim was never evicted"
+    assert flt.respawns > rs0, "victim was never re-spawned"
+    return len(results)
+
+
+def leg_consistent_reads(router, backend, directory, writer, graphs, qs):
+    """Pinned reads at the tip LSN, bit-identical to one caught-up
+    in-process follower asked the same questions."""
+    L = writer.last_lsn
+    futs = [(u, v, p, router.submit(u, v, p, min_lsn=L,
+                                    lsn_timeout=240))
+            for u, v, p in qs]
+    ref = serve.QueryServer.follow(directory, backend=backend)
+    ref.start()
+    try:
+        assert ref.wait_for_lsn(L, timeout=120), "follower never caught up"
+        for u, v, p, f in futs:
+            ans, lsn = f.result(timeout=300)
+            assert lsn >= L, f"consistent read served at lsn {lsn} < {L}"
+            check_at_lsn(graphs, u, v, p, ans, lsn, "consistent-read")
+            ref_ans, ref_lsn = ref.submit(u, v, p,
+                                          with_lsn=True).result(timeout=300)
+            assert ref_lsn >= L
+            assert ans == ref_ans, \
+                f"fleet {ans!r} != caught-up follower {ref_ans!r}"
+    finally:
+        ref.stop()
+    return len(futs)
+
+
+def leg_writer_kill(router, directory, graphs, steps, qs, seed,
+                    first_step):
+    """SIGKILL the writer process mid-publish; attach a fresh writer,
+    resume the stream, and keep reading correctly throughout."""
+    here = os.path.abspath(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(here)), "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, here, "--writer", directory, str(seed),
+         str(first_step)],
+        env=env, stdout=subprocess.PIPE, text=True)
+    acked, killed = first_step, False
+    for line in proc.stdout:
+        line = line.strip()
+        if line.startswith("LSN"):
+            acked = int(line.split()[1])
+            if acked >= first_step + 3:
+                proc.send_signal(signal.SIGKILL)  # no cleanup runs
+                killed = True
+                break
+        if line == "DONE":
+            break
+    proc.wait(timeout=60)
+    assert killed, "writer finished before the kill"
+
+    # reads stay correct while the writer seat is empty
+    for u, v, p in qs[:4]:
+        ans, lsn = router.submit(u, v, p).result(timeout=300)
+        check_at_lsn(graphs, u, v, p, ans, lsn, "writer-dead")
+
+    # the new writer sees the acked prefix (+ at most one in-flight
+    # append the kill let land) and resumes the deterministic stream
+    w2 = fleet_mod.FleetWriter(directory)
+    try:
+        k = w2.last_lsn
+        assert k in (acked, acked + 1), \
+            f"recovered writer at lsn {k}, acked {acked}"
+        assert np.array_equal(w2.graph.indices, graphs[k].indices)
+        assert np.array_equal(w2.graph.labels, graphs[k].labels)
+        lsn2 = w2.publish(*steps[k])
+        futs = [(u, v, p, router.submit(u, v, p, min_lsn=lsn2,
+                                        lsn_timeout=240))
+                for u, v, p in qs]
+        for u, v, p, f in futs:
+            ans, lsn = f.result(timeout=300)
+            assert lsn >= lsn2
+            check_at_lsn(graphs, u, v, p, ans, lsn, "writer-handoff")
+    finally:
+        w2.close()
+    return k
+
+
+def run_one(backend: str, workdir: str, seed: int) -> None:
+    d = os.path.join(workdir, f"fleet-{backend}")
+    graphs, steps = make_plan(seed)
+    qs = query_pool(seed)
+    idx0 = tdr_build.build_index(graphs[0], CFG, backend=backend)
+    fleet_mod.init_store(idx0, d)
+    writer = fleet_mod.FleetWriter(d)
+    n_answers = 0
+    with fleet_mod.Fleet(d, N_REPLICAS, backend, hb_s=0.1) as flt:
+        router = FleetRouter(flt)
+        n_answers += leg_replica_kill(router, flt, writer, graphs,
+                                      steps, qs, n_pub=6)
+        n_answers += leg_consistent_reads(router, backend, d, writer,
+                                          graphs, qs)
+        first_step = writer.last_lsn
+        writer.close()   # single-writer seat: release before the worker
+        k = leg_writer_kill(router, d, graphs, steps, qs, seed,
+                            first_step)
+        print(f"[fleet] {backend}: {n_answers} streamed answers "
+              f"oracle-correct at their read LSNs, "
+              f"evictions={flt.evictions} respawns={flt.respawns} "
+              f"redispatched={router.redispatched}, writer handed "
+              f"off at lsn={k}")
+
+
+def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "--writer":
+        writer_worker(sys.argv[2], int(sys.argv[3]), int(sys.argv[4]))
+        return
+    import tempfile
+    backends = sys.argv[1:] or ["segment", "pallas"]
+    with tempfile.TemporaryDirectory() as workdir:
+        for backend in backends:
+            run_one(backend, workdir, seed=9)
+    print("fleet check OK")
+
+
+if __name__ == "__main__":
+    main()

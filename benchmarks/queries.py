@@ -9,6 +9,11 @@ The semiring rows (``dist-true`` / ``witness-true``) time the
 the product-graph BFS oracle (``dfs_baseline.shortest_pcr``) — the
 pallas-interpret legs carry ``gated: false`` like every other
 kernel-dispatch-dominated interpret row.
+
+The ``rpq-true`` rows time the regex front-end (``tdr_query.rpq_batch``:
+lowered + automaton-product routes mixed, as live traffic would be)
+over oracle-reachable regex queries, normalized against the
+product-graph DFS oracle (``dfs_baseline.answer_rpq``).
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ import jax
 import numpy as np
 
 from repro.core import dfs_baseline, engine as engine_mod
-from repro.core import graph as G, tdr_build, tdr_query
+from repro.core import graph as G, rpq, tdr_build, tdr_query
 from . import common
 
 
@@ -59,6 +64,7 @@ def run(scale: str = "smoke", seed: int = 0,
                               "phase2_us": round(
                                   stats.phase2_s / n * 1e6, 1)}))
         rows.extend(_semiring_rows(g, idx, kind, sets, backend))
+        rows.extend(_rpq_rows(g, idx, kind, backend, seed))
     return rows
 
 
@@ -114,3 +120,51 @@ def _semiring_rows(g, idx, kind: str, sets: dict,
                  f"correct={ok}",
                  dict(flag)))
     return rows
+
+
+def _rpq_rows(g, idx, kind: str, backend: str | None, seed: int) -> list:
+    """tableIII-style row for the regex front-end: a reachable (oracle-
+    true) mix of lowered and product-route regexes through
+    ``rpq_batch``, DFS-normalized like the boolean rows."""
+    flag = {"gated": False} if _interpret(backend) else {}
+    rng = np.random.default_rng(seed + 5)
+    n_l = g.n_labels
+
+    def draw():
+        a, b, c = rng.choice(n_l, size=3, replace=False).tolist()
+        i = int(rng.integers(4))
+        if i == 0:                                    # lowered: LCR plan
+            return rpq.parse(f"(l{a} | l{b})*")
+        if i == 1:                                    # product: ordered
+            return rpq.parse(f"l{a} . (l{b} | l{c})*")
+        if i == 2:                                    # product: Plus
+            return rpq.parse(f"(l{a} | l{b} | l{c})+")
+        return rpq.parse(f"l{a} . l{b}")              # product: 2-step
+
+    qs, tries = [], 0
+    while len(qs) < 96 and tries < 16000:
+        tries += 1
+        u = int(rng.integers(g.n_vertices))
+        v = int(rng.integers(g.n_vertices))
+        r = draw()
+        if dfs_baseline.answer_rpq(g, u, v, r):
+            qs.append((u, v, r))
+    if not qs:
+        return []
+
+    t0 = time.perf_counter()
+    want = [dfs_baseline.answer_rpq(g, u, v, r) for u, v, r in qs]
+    dfs_s = time.perf_counter() - t0
+    best = float("inf")
+    got = None
+    for _ in range(3):   # first pass compiles the NFA-product shapes
+        t0 = time.perf_counter()
+        got = tdr_query.rpq_batch(idx, qs, backend=backend)
+        best = min(best, time.perf_counter() - t0)
+    n = len(qs)
+    return [(f"tableIII/{kind}/rpq-true",
+             round(best / n * 1e6, 1),
+             f"dfs_us={dfs_s / n * 1e6:.1f};"
+             f"speedup={dfs_s / max(best, 1e-9):.1f}x;"
+             f"correct={got.tolist() == want}",
+             dict(flag))]

@@ -188,6 +188,47 @@ def verify_witness(graph: Graph, u: int, v: int, p: pat.Pattern,
     return any(t.satisfied_by(seen_labels) for t in pat.to_dnf(p))
 
 
+def answer_rpq(graph: Graph, u: int, v: int, r,
+               stats: SearchStats | None = None) -> bool:
+    """Exact RPQ answer: BFS over the product of the graph with the
+    Glushkov NFA of ``r`` (states ``(vertex, nfa_state)``), the oracle
+    every RPQ executor is tested against.  A u→v path answers True iff
+    its label *sequence* is a word of ``L(r)``; ``u == v`` answers True
+    iff ε ∈ L(r) (``rpq.nullable``)."""
+    from . import rpq as rpq_mod
+    stats = stats or SearchStats()
+    nfa = rpq_mod.compile_nfa(r, graph.n_labels)
+    if u == v and nfa.nullable:
+        return True  # empty path, empty word
+    tab = nfa.tab
+    indptr, indices, labels = graph.indptr, graph.indices, graph.labels
+    # seed: every NFA state reachable from the start on zero edges is
+    # just the start state (Glushkov has no ε-transitions)
+    start = (int(u), 0)
+    seen = {start}
+    stack = [start]
+    while stack:
+        x, q = stack.pop()
+        stats.states_visited += 1
+        row = tab[:, q]
+        for i in range(indptr[x], indptr[x + 1]):
+            stats.edges_scanned += 1
+            nxt = int(row[int(labels[i])])
+            if not nxt:
+                continue
+            y = int(indices[i])
+            for p in range(nfa.n_states):
+                if not (nxt >> p) & 1:
+                    continue
+                if y == v and (nfa.accept >> p) & 1:
+                    return True
+                st = (y, p)
+                if st not in seen:
+                    seen.add(st)
+                    stack.append(st)
+    return False
+
+
 def answer_lcr(graph: Graph, u: int, v: int, allowed: set[int],
                stats: SearchStats | None = None) -> bool:
     """Exact LCR answer (BFS restricted to allowed labels)."""

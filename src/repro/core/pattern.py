@@ -274,6 +274,8 @@ def _tokenise(text: str) -> list[str]:
             j = i
             while j < len(text) and (text[j].isalnum() or text[j] == "_"):
                 j += 1
+            if j == i:      # non-word, non-operator char: never advances
+                raise ValueError(f"bad character {ch!r} in pattern {text!r}")
             word = text[i:j]
             out.append(subst.get(word, word))
             i = j

@@ -78,6 +78,7 @@ from . import bitset
 from . import engine as engine_mod
 from . import graph as graph_mod
 from . import pattern as pat
+from . import rpq as rpq_mod
 from . import dfs_baseline as dfs_mod
 from .semiring import COUNT_CAP, DIST16
 from .tdr_build import TDRIndex, _null_words
@@ -89,10 +90,12 @@ _FULL = jnp.uint32(0xFFFFFFFF)
 EXACT_MODES = ("auto", "compact", "full", "legacy")
 
 #: query kinds the planner emits (one per query): boolean reachability,
-#: shortest pattern-constrained hop distance, an actual witness path, and
-#: bounded label-distinct route counting.  ``answer_plan`` serves "bool";
-#: the semiring executors at the bottom of this module serve the rest.
-QUERY_KINDS = ("bool", "dist", "witness", "count")
+#: shortest pattern-constrained hop distance, an actual witness path,
+#: bounded label-distinct route counting, and regular path queries.
+#: ``answer_plan`` serves "bool"; the semiring executors at the bottom of
+#: this module serve dist/witness/count; "rpq" queries carry a
+#: ``repro.core.rpq`` AST instead of a pattern and run ``rpq_batch``.
+QUERY_KINDS = ("bool", "dist", "witness", "count", "rpq")
 
 
 # ------------------------------------------------------------------ plans
@@ -298,6 +301,10 @@ def compile_queries(index: TDRIndex,
             raise ValueError(
                 f"unknown query kind {kind!r}; expected one of "
                 f"{QUERY_KINDS}")
+        if kind == "rpq":
+            raise ValueError(
+                "kind='rpq' queries carry a repro.core.rpq AST, not a "
+                "pattern; route them through rpq_batch / answer_mixed")
         kinds.append(kind)
         norm.append((q[0], q[1], q[2]))
     queries = norm
@@ -1928,6 +1935,395 @@ def count_routes(index: TDRIndex, u: int, v: int, p: pat.Pattern,
     return int(np.asarray(total)[0])
 
 
+# ------------------------------------------------ RPQ executor (PR 10)
+# Regular path queries constrain the label *order* along a path, which
+# the subset-state planes above cannot express.  The fragment that DNF
+# lowering can absorb exactly (unions of single-atom stars — the RPQ
+# spelling of LCR) rides ``answer_plan`` untouched; everything else runs
+# the same corridor-compacted bidirectional expansion generalized from
+# subset-states to Glushkov NFA states: the ``[V', J]`` packed plane's
+# uint32 holds "NFA states reachable at vertex x" (forward) / "states
+# from which (v, accept) is reachable" (backward), per-edge transitions
+# come from the dense per-job ``[L, 32]`` NFA tables, and a query meets
+# as soon as some vertex holds ``f & b != 0``.  The TDR filter cascade
+# still prunes via the regex's label over-approximation — but only a
+# FALSE verdict is sound (set logic is order-blind), so the cascade runs
+# ``filters_only`` and survivors go to the product executor.
+
+
+class RpqRows(NamedTuple):
+    """Per-regex compiled operands (endpoint-independent, cached like
+    ``PatternRows`` under the same LRU with kind="rpq" keys)."""
+    tab: np.ndarray             # uint32 [L, 32]  forward NFA table
+    rtab: np.ndarray            # uint32 [L, 32]  reverse NFA table
+    accept: int                 # uint32 accept-state bitmask
+    nullable: bool              # ε ∈ L(r): u == v answers True
+    nfa_states: int             # Glushkov state count (<= 32)
+    lowered: Any                # exact pattern.Pattern lowering, or None
+    approx: Any                 # over-approximation pattern (prune only)
+    feasible: bool              # False: some required label can't exist
+    alpha: tuple                # in-graph alphabet (pallas label classes)
+
+    @property
+    def n_terms(self) -> int:
+        return 1                # one product-executor job per query
+
+
+def _compile_rpq_rows(index: TDRIndex, r, max_m: int) -> RpqRows:
+    n_labels = index.graph.n_labels
+    nfa = rpq_mod.compile_nfa(r, n_labels)
+    lowered = rpq_mod.lower_to_pattern(r, n_labels)
+    approx, feasible = rpq_mod.approx_pattern(r, n_labels,
+                                              max_require=max_m)
+    alpha = tuple(sorted(a for a in rpq_mod.alphabet(r) if a < n_labels))
+    return RpqRows(tab=nfa.tab, rtab=nfa.rtab, accept=int(nfa.accept),
+                   nullable=bool(nfa.nullable), nfa_states=nfa.n_states,
+                   lowered=lowered, approx=approx, feasible=feasible,
+                   alpha=alpha)
+
+
+def rpq_rows(index: TDRIndex, r, max_m: int = 4,
+             stats: "QueryStats | None" = None) -> RpqRows:
+    """Cached compiled operands for one RPQ (hash-consed canonical key,
+    same bounded LRU and lock discipline as ``pattern_rows``)."""
+    key = (rpq_mod.canonical_key(r), max_m, "rpq")
+    if stats is not None:
+        stats.plan_lookups += 1
+    with _plan_cache_lock:
+        cache = getattr(index, "_plan_cache", None)
+        if cache is None:
+            cache = {}
+            index._plan_cache = cache
+        rows = cache.get(key)
+        if rows is not None:
+            cache[key] = cache.pop(key)     # refresh LRU position
+            return rows
+    if stats is not None:
+        stats.plan_misses += 1
+    # NFA construction + lowering run outside the lock (pattern_rows'
+    # compile-outside-lock idiom)
+    rows = _compile_rpq_rows(index, rpq_mod.canonicalize(r), max_m)
+    with _plan_cache_lock:
+        while len(cache) >= PLAN_CACHE_CAP:
+            cache.pop(next(iter(cache)))
+        cache[key] = rows
+    return rows
+
+
+def _nfa_apply(masks, tab_e, q_u: int = 32):
+    """Union of ``tab_e[..., q]`` over the set bits q of ``masks`` — one
+    NFA step applied to a packed state-subset plane.  Static ``q_u``-way
+    unroll (the chunk's NFAs use only states < q_u, so higher bits are
+    provably never set); linearity over union (δ(S₁∪S₂, a) = δ(S₁,a) ∪
+    δ(S₂,a)) is what lets the push below OR-gather neighbours *before*
+    applying the transition table."""
+    out = jnp.zeros_like(masks)
+    for q in range(q_u):
+        hit = ((masks >> q) & jnp.uint32(1)) != 0
+        out = out | jnp.where(hit, tab_e[..., q], jnp.uint32(0))
+    return out
+
+
+def _rpq_sup_need(q_n: int):
+    """``_meet``'s sup_need specialized to the NFA meet: forward state q
+    completes with exactly backward state q, so done ⟺ f & b != 0."""
+    bits = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.broadcast_to(bits[:, None], (32, q_n))
+
+
+@functools.partial(jax.jit, static_argnames=("v_p", "max_rounds",
+                                             "chunk_words", "q_u"))
+def _rpq_bidi(su, sv, tabs, rtabs, accept, sub_src, sub_dst, sub_lab,
+              evalid, ids_in, ids_out, *, v_p: int, max_rounds: int,
+              chunk_words: int, q_u: int = 32):
+    """Segment-backend product-graph fixpoint over a (sub)graph's edge
+    lists.  One round = lane gather, per-edge NFA transition from the
+    job's dense table, OR-reduction over the padded in/out incidence
+    (``ids_in``/``ids_out``, sentinel = the appended zero row; padding
+    edges are simply never referenced).  When the incidence is ``None``
+    (degree skew beyond the gather cap) the reduction falls back to
+    packed segment ORs with explicit ``evalid`` masking — a padding
+    edge would inject fake word letters; unlike the idempotent subset-
+    state closure, a fabricated edge changes the language.
+
+    ``q_u`` (static) caps the NFA-apply unroll: every NFA in the chunk
+    has <= q_u states, so bits >= q_u are never set in any plane and
+    the sliced per-edge tables stay exact."""
+    q_n = su.shape[0]
+    iota = jnp.arange(q_n)
+    f0 = jnp.zeros((v_p, q_n), jnp.uint32).at[su, iota].set(jnp.uint32(1))
+    b0 = jnp.zeros((v_p, q_n), jnp.uint32).at[sv, iota].set(accept)
+    tab_e = jnp.transpose(tabs[:, sub_lab, :q_u], (1, 0, 2))  # [E',J,q_u]
+    rtab_e = jnp.transpose(rtabs[:, sub_lab, :q_u], (1, 0, 2))
+    ev = evalid[:, None]
+    cor_w = jnp.full((v_p, q_n), _FULL)
+
+    def reduce_cols(val, ids):
+        # per-column gathers accumulate without the [V', D, J] transient
+        # a single 3D gather would materialize (same idiom as the
+        # boolean core: 3× faster on CPU than scatter-reduce)
+        out = val[ids[:, 0]]
+        for j in range(1, ids.shape[1]):  # static unroll over D columns
+            out = out | val[ids[:, j]]
+        return out
+
+    def push(frontier, gat, te, scat, ids):
+        val = _nfa_apply(frontier[gat], te, q_u)             # [E', J]
+        if ids is None:
+            val = jnp.where(ev, val, jnp.uint32(0))
+            return bitset.segment_or_words(val, scat, num_segments=v_p,
+                                           chunk_words=chunk_words)
+        val = jnp.concatenate(
+            [val, jnp.zeros((1, q_n), jnp.uint32)], axis=0)
+        for level in ids:   # 1 level, or virtual-row split on heavy tails
+            val = reduce_cols(val, level)
+        return val                                           # [V', J]
+
+    return _bidi_loop(
+        f0, b0,
+        lambda f: push(f, sub_src, tab_e, sub_dst, ids_in),
+        lambda b: push(b, sub_dst, rtab_e, sub_src, ids_out),
+        cor_w, _rpq_sup_need(q_n), max_rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds", "mode", "q_u"))
+def _rpq_bidi_matmul(su, sv, tabs, rtabs, accept, adj_rev, adj_fwd,
+                     class_label, *, max_rounds: int, mode: str,
+                     q_u: int = 32):
+    """Pallas-backend product-graph fixpoint: one ``bitset_matmul`` per
+    label class per direction per round.  Every in-graph alphabet label
+    of the chunk gets its own class; the merged neutral class carries a
+    zero transition table — sound because a label outside every job's
+    alphabet has an all-zero NFA table row anyway (no word of the
+    language uses it)."""
+    q_n = su.shape[0]
+    v_p = adj_rev.shape[1]
+    iota = jnp.arange(q_n)
+    f0 = jnp.zeros((v_p, q_n), jnp.uint32).at[su, iota].set(jnp.uint32(1))
+    b0 = jnp.zeros((v_p, q_n), jnp.uint32).at[sv, iota].set(accept)
+    labx = jnp.maximum(class_label, 0)
+    live = (class_label >= 0)[:, None, None]
+    tab_cls = jnp.where(live,
+                        jnp.transpose(tabs[:, labx, :q_u], (1, 0, 2)),
+                        jnp.uint32(0))                      # [C+1, J, q_u]
+    rtab_cls = jnp.where(live,
+                         jnp.transpose(rtabs[:, labx, :q_u], (1, 0, 2)),
+                         jnp.uint32(0))
+    cor_w = jnp.full((v_p, q_n), _FULL)
+
+    def push(frontier, adj_set, tab_set):
+        # scan over label classes (one kernel call site per direction,
+        # as in _bidi_matmul_core)
+        def body(upd, operand):
+            adj_c, tab_c = operand                  # [V', Kw], [J, 32]
+            y = engine_mod._matmul_rows(adj_c, frontier, mode)[:v_p]
+            return upd | _nfa_apply(y, tab_c[None, :, :], q_u), None
+        upd, _ = jax.lax.scan(body, jnp.zeros_like(frontier),
+                              (adj_set, tab_set))
+        return upd
+
+    return _bidi_loop(
+        f0, b0,
+        lambda f: push(f, adj_rev, tab_cls),
+        lambda b: push(b, adj_fwd, rtab_cls),
+        cor_w, _rpq_sup_need(q_n), max_rounds)
+
+
+def rpq_batch(index: TDRIndex, queries: Sequence[tuple], *,
+              max_m: int = 4, exact_chunk: int = 32,
+              backend: str | None = None, exact_mode: str = "auto",
+              engine_config: "engine_mod.EngineConfig | None" = None,
+              special_labels: Sequence[int] | None = None,
+              pin_m: int | None = None, pad_lo: int = 16,
+              q_unroll: int | None = None,
+              stats: QueryStats | None = None) -> np.ndarray:
+    """Answer ``(u, v, rpq)`` regular path queries.  Returns bool [n].
+
+    ``q_unroll`` pins the static NFA state-unroll width (a power of two
+    in 4..32).  ``None`` derives the tightest width from each chunk's
+    regexes — small automata run up to 8x fewer per-edge table ops; a
+    serving layer pins 32 so the compiled shape never depends on which
+    regexes a batch happens to hold.
+
+    Three routes, all oracle-equal to ``dfs_baseline.answer_rpq``:
+
+    * **lowered** — regexes in the index-expressible fragment
+      (``rpq.lower_to_pattern``) become plain PCR queries and take
+      ``answer_plan`` *bit-for-bit* with the equivalent composite
+      pattern (an LCR asked as ``(a|b|…)*`` shares plans, caches, and
+      answers with the LCR asked directly);
+    * **infeasible** — a required label no graph edge can carry: only
+      the empty path remains, so the answer is ``u == v and ε ∈ L(r)``;
+    * **product** — everything else: the filter cascade on the regex's
+      over-approximation pattern prunes (FALSE verdicts only — TRUE is
+      order-blind and proves nothing), survivors run the corridor-
+      compacted automaton-product expansion on either backend.
+    """
+    if exact_mode not in ("auto", "compact", "full"):
+        raise ValueError(f"unknown exact_mode {exact_mode!r} for rpq; "
+                         "expected auto | compact | full")
+    if q_unroll is not None and q_unroll not in (4, 8, 16, 32):
+        raise ValueError(f"q_unroll must be a power of two in 4..32, "
+                         f"got {q_unroll!r}")
+    t0 = time.perf_counter()
+    eng = index.engine(backend, engine_config)
+    stats = stats if stats is not None else QueryStats()
+    out = np.zeros(len(queries), dtype=bool)
+    if not queries:
+        return out
+    rows = [rpq_rows(index, r, max_m, stats=stats)
+            for (_, _, r) in queries]
+
+    low_ix = [i for i, rw in enumerate(rows) if rw.lowered is not None]
+    if low_ix:
+        lowq = [(queries[i][0], queries[i][1], rows[i].lowered)
+                for i in low_ix]
+        plan = compile_queries(index, lowq, max_m=max_m, stats=stats)
+        ans = answer_plan(index, plan, exact_chunk=exact_chunk,
+                          stats=stats, backend=backend,
+                          exact_mode=exact_mode,
+                          engine_config=engine_config,
+                          special_labels=special_labels, pin_m=pin_m,
+                          pad_lo=pad_lo)
+        out[low_ix] = ans
+
+    hard_ix = [i for i, rw in enumerate(rows) if rw.lowered is None]
+    # ε answers need no path; infeasible regexes allow nothing else
+    for i in list(hard_ix):
+        u, v, _ = queries[i][:3]
+        if u == v and rows[i].nullable:
+            out[i] = True
+            hard_ix.remove(i)
+        elif not rows[i].feasible:
+            hard_ix.remove(i)       # out[i] stays False
+    if not hard_ix:
+        return out
+
+    # phase 1: the cascade on the over-approximation — a FALSE verdict
+    # refutes the RPQ (every matching word satisfies the approximation);
+    # filters_only returns the sound upper bound TRUE ∪ UNKNOWN
+    approxq = [(queries[i][0], queries[i][1], rows[i].approx)
+               for i in hard_ix]
+    aplan = compile_queries(index, approxq, max_m=max_m, stats=stats)
+    ub = answer_plan(index, aplan, exact_chunk=exact_chunk, stats=stats,
+                     filters_only=True, backend=backend,
+                     exact_mode=exact_mode, engine_config=engine_config,
+                     special_labels=special_labels, pin_m=pin_m,
+                     pad_lo=pad_lo)
+    pos_of = {i: k for k, i in enumerate(hard_ix)}  # aplan job per query
+    hard_ix = [i for i, alive in zip(hard_ix, ub) if alive]
+    if not hard_ix:
+        return out
+
+    # phase 2: automaton-product expansion.  The approx plan is single-
+    # term per query (its job k is approxq position k), so it doubles as
+    # the endpoint plan and the Bloom-corridor compaction source.
+    t1 = time.perf_counter()
+    ex = _executor(index, eng)
+    jobs_all = np.asarray([pos_of[i] for i in hard_ix], dtype=np.int64)
+    dev = PlanDevice(jnp.asarray(aplan.u), jnp.asarray(aplan.v),
+                     jnp.asarray(aplan.req_labels),
+                     jnp.asarray(aplan.forb_raw_w),
+                     jnp.asarray(aplan.full_mask))
+    done_all = np.zeros(len(jobs_all), dtype=bool)
+    for c0 in range(0, len(jobs_all), exact_chunk):
+        jobs = jobs_all[c0:c0 + exact_chunk]
+        real_n = len(jobs)
+        if real_n < exact_chunk:    # pad to a stable jit shape
+            jobs = np.concatenate(
+                [jobs, np.full(exact_chunk - real_n, jobs[0])])
+        ch = _kind_chunk(index, ex, aplan, dev, jobs, exact_mode)
+        qrows = [rows[hard_ix[c0 + (j if j < real_n else 0)]]
+                 for j in range(len(jobs))]
+        if q_unroll is None:
+            q_u = 4
+            while q_u < max(rw.nfa_states for rw in qrows):
+                q_u *= 2
+        else:
+            q_u = q_unroll
+        max_rounds = ch.v_p * q_u + 1    # product-graph diameter bound
+        tabs = jnp.asarray(np.stack([rw.tab for rw in qrows]))
+        rtabs = jnp.asarray(np.stack([rw.rtab for rw in qrows]))
+        accept = jnp.asarray(
+            np.asarray([rw.accept for rw in qrows], np.uint32))
+        su, sv = jnp.asarray(ch.su), jnp.asarray(ch.sv)
+        done = rounds = None
+        if eng.backend == "pallas" and ch.evalid.any():
+            # per-alphabet-label classes; the merged neutral class has a
+            # zero NFA table.  Skipped when the corridor held no real
+            # edges — the packed fake 0→0 edge would fabricate a letter.
+            special = set()
+            for rw in qrows:
+                special.update(rw.alpha)
+            if special_labels is not None:
+                special.update(int(l) for l in special_labels
+                               if 0 <= int(l) < index.graph.n_labels)
+            special = tuple(sorted(special))
+            kw_b = bitset.n_words(ch.v_p)
+            n_mats = 2 * (len(special) + 1)
+            if n_mats * ch.v_p * kw_b * 4 <= eng.config.max_dense_bytes:
+                class_label = jnp.asarray(
+                    np.asarray(special + (-1,), np.int32))
+                if ch.sub_ids is None:
+                    adj_rev = eng.label_class_adjacency(special,
+                                                        reverse=True)
+                    adj_fwd = eng.label_class_adjacency(special,
+                                                        reverse=False)
+                else:
+                    adj_rev = jnp.asarray(
+                        engine_mod.pack_label_class_edges_np(
+                            ch.src, ch.dst, ch.lab, ch.v_p, special,
+                            reverse=True))
+                    adj_fwd = jnp.asarray(
+                        engine_mod.pack_label_class_edges_np(
+                            ch.src, ch.dst, ch.lab, ch.v_p, special,
+                            reverse=False))
+                done_d, rounds = _rpq_bidi_matmul(
+                    su, sv, tabs, rtabs, accept, adj_rev, adj_fwd,
+                    class_label, max_rounds=max_rounds,
+                    mode=eng.matmul_mode, q_u=q_u)
+                done = np.asarray(done_d)
+        if done is None:
+            # padded-incidence gathers replace the scatter segment-OR
+            # (built from the real edges only, so padding rows need no
+            # mask on this path); degree skew past the cap falls back
+            e_real = int(ch.evalid.sum())
+            e_p = int(ch.src.shape[0])
+            ids_in = ids_out = None
+            if e_real:
+                plan_in = graph_mod.incidence_plan(
+                    ch.dst[:e_real], ch.v_p, e_p)
+                plan_out = graph_mod.incidence_plan(
+                    ch.src[:e_real], ch.v_p, e_p)
+                gb = sum(a.size for a in plan_in + plan_out) * \
+                    len(jobs) * 4
+                if gb <= ExactExecutor.GATHER_BYTES_CAP:
+                    ids_in = tuple(jnp.asarray(a) for a in plan_in)
+                    ids_out = tuple(jnp.asarray(a) for a in plan_out)
+            done_d, rounds = _rpq_bidi(
+                su, sv, tabs, rtabs, accept, jnp.asarray(ch.src),
+                jnp.asarray(ch.dst), jnp.asarray(ch.lab),
+                jnp.asarray(ch.evalid), ids_in, ids_out, v_p=ch.v_p,
+                max_rounds=max_rounds,
+                chunk_words=eng.config.chunk_words, q_u=q_u)
+            done = np.asarray(done_d)
+        done_all[c0:c0 + real_n] = done[:real_n]
+        stats._round_parts.append(rounds)
+        stats.corridor_active += ch.n_sub
+        stats.corridor_total += index.graph.n_vertices
+    for i, d in zip(hard_ix, done_all):
+        out[i] = bool(d)
+    stats.exact_jobs += len(jobs_all)
+    stats.phase2_s += time.perf_counter() - t1
+    stats.phase1_s += t1 - t0
+    return out
+
+
+def answer_rpq(index: TDRIndex, u: int, v: int, r, **kw) -> bool:
+    """Single-query convenience wrapper over ``rpq_batch``."""
+    return bool(rpq_batch(index, [(u, v, r)], **kw)[0])
+
+
 def answer_mixed(index: TDRIndex, queries: Sequence[tuple], *,
                  hops: int = 8, k: int | None = None,
                  cap: int = COUNT_CAP, max_m: int = 4,
@@ -1938,8 +2334,10 @@ def answer_mixed(index: TDRIndex, queries: Sequence[tuple], *,
 
     Results align with the input order: bool for "bool", int distance
     (-1 unreachable) for "dist", an edge list / [] / None for "witness",
-    and an int for "count" (bounded by ``hops``, clamped at ``cap``).
-    Same-kind queries batch together; "witness"/"count" run per query."""
+    an int for "count" (bounded by ``hops``, clamped at ``cap``), and
+    bool for "rpq" (whose third element is a ``repro.core.rpq`` AST
+    rather than a pattern).  Same-kind queries batch together;
+    "witness"/"count" run per query."""
     kinds = [(q[3] if len(q) > 3 else "bool") for q in queries]
     for kd in kinds:
         if kd not in QUERY_KINDS:
@@ -1953,6 +2351,13 @@ def answer_mixed(index: TDRIndex, queries: Sequence[tuple], *,
         ans = answer_batch(index, [queries[i][:3] for i in bool_ix],
                            **common)
         for i, a in zip(bool_ix, ans):
+            results[i] = bool(a)
+    rpq_ix = [i for i, kd in enumerate(kinds) if kd == "rpq"]
+    if rpq_ix:
+        # the third element is a repro.core.rpq AST, not a pattern —
+        # compile_queries would reject it, so partition before batching
+        ans = rpq_batch(index, [queries[i][:3] for i in rpq_ix], **common)
+        for i, a in zip(rpq_ix, ans):
             results[i] = bool(a)
     dist_ix = [i for i, kd in enumerate(kinds) if kd == "dist"]
     if dist_ix:

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core import deltalog as deltalog_mod
 from repro.core import pattern as pat
+from repro.core import rpq as rpq_mod
 from repro.core import snapshot as snapshot_mod
 from repro.launch import serve
 
@@ -176,7 +177,11 @@ def replica_worker(directory: str, backend: str | None, poll_s: float,
 
     def answer(rid: int, msg: dict) -> None:
         try:
-            p = pat.parse(msg["p"])
+            kind = msg.get("kind", "bool")
+            # rpq queries ship as regex text, every other kind as
+            # pattern text — the kind field picks the parser
+            p = rpq_mod.parse(msg["p"]) if kind == "rpq" \
+                else pat.parse(msg["p"])
             min_lsn = int(msg.get("min_lsn") or 0)
             if min_lsn and not server.wait_for_lsn(
                     min_lsn, timeout=msg.get("lsn_timeout", 60.0)):
@@ -184,8 +189,7 @@ def replica_worker(directory: str, backend: str | None, poll_s: float,
                     f"replica did not reach lsn {min_lsn} "
                     f"(at {server.stats.applied_lsn})")
             fut = server.submit(
-                int(msg["u"]), int(msg["v"]), p,
-                kind=msg.get("kind", "bool"),
+                int(msg["u"]), int(msg["v"]), p, kind=kind,
                 hops=int(msg.get("hops", 8)),
                 k=msg.get("k"), with_lsn=True)
         except Exception as exc:  # noqa: BLE001 — goes on the wire

@@ -28,6 +28,7 @@ import threading
 from concurrent.futures import Future
 
 from repro.core import pattern as pat
+from repro.core import rpq as rpq_mod
 from repro.launch.fleet import Fleet, FleetUnavailable, Replica, ReplicaDied
 
 
@@ -79,10 +80,13 @@ class FleetRouter:
                kind: str = "bool", hops: int = 8, k: int | None = None,
                min_lsn: int = 0, lsn_timeout: float = 60.0) -> Future:
         """Route one PCR query; the future resolves to ``(answer, lsn)``
-        with ``lsn >= min_lsn`` guaranteed for consistent reads."""
+        with ``lsn >= min_lsn`` guaranteed for consistent reads.  For
+        ``kind="rpq"`` the query ``p`` is a ``repro.core.rpq`` regex AST
+        (serialized as regex text on the wire) rather than a pattern."""
         rid = next(self._ids)
+        ptxt = rpq_mod.unparse(p) if kind == "rpq" else pat.unparse(p)
         wire = {"op": "q", "id": rid, "u": int(u), "v": int(v),
-                "p": pat.unparse(p), "kind": kind, "hops": int(hops)}
+                "p": ptxt, "kind": kind, "hops": int(hops)}
         if k is not None:
             wire["k"] = int(k)
         if min_lsn:

@@ -92,6 +92,7 @@ from repro.core import deltalog as deltalog_mod
 from repro.core import engine as engine_mod
 from repro.core import graph as graph_mod
 from repro.core import pattern as pat
+from repro.core import rpq as rpq_mod
 from repro.core import snapshot as snapshot_mod
 from repro.core import tdr_build, tdr_query
 
@@ -362,9 +363,10 @@ class QueryServer:
         """Enqueue one PCR query; the future resolves per ``kind``:
         bool ("bool"), int hop distance, -1 unreachable ("dist", optional
         k-hop bound ``k``), an edge-list witness path / [] / None
-        ("witness"), or a saturating walk count over <= ``hops`` hops
+        ("witness"), a saturating walk count over <= ``hops`` hops
         ("count", single-DNF-term patterns only — rejected here, in the
-        caller's thread, not on the scheduler).
+        caller's thread, not on the scheduler), or bool for "rpq" —
+        whose ``p`` is a ``repro.core.rpq`` AST, not a pattern.
 
         ``block=True`` waits for queue room (backpressure, closed-loop
         clients); ``block=False`` raises ``QueueFull`` immediately when
@@ -382,8 +384,20 @@ class QueryServer:
                              f"of {tdr_query.QUERY_KINDS}")
         # resolving the pattern against the plan cache here (caller's
         # thread) keeps DNF work off the scheduler thread and gives the
-        # term count the job-budget coalescer needs
-        rows = tdr_query.pattern_rows(self.index, p, cfg.max_m, kind=kind)
+        # term count the job-budget coalescer needs.  RPQ queries carry
+        # a regex AST instead of a pattern: same caller-thread compile
+        # (Glushkov NFA + lowering), same per-index LRU.
+        if kind == "rpq":
+            if isinstance(p, (pat.Label, pat.Not, pat.And, pat.Or)):
+                raise ValueError(
+                    "kind='rpq' queries take a repro.core.rpq AST, not "
+                    "a pattern (use rpq.parse / rpq.lcr)")
+            rows = tdr_query.rpq_rows(self.index, p, cfg.max_m)
+            ckey = rpq_mod.canonical_key(p)
+        else:
+            rows = tdr_query.pattern_rows(self.index, p, cfg.max_m,
+                                          kind=kind)
+            ckey = pat.canonical_key(p)
         if kind == "count" and rows.n_terms != 1:
             raise ValueError(
                 f"count queries need a single-DNF-term pattern, got "
@@ -392,7 +406,7 @@ class QueryServer:
         # the cache key — a boolean hit can never answer a distance query
         bound = int(hops) if kind == "count" else \
             (None if k is None else int(k)) if kind == "dist" else None
-        rkey = (int(u), int(v), pat.canonical_key(p), kind, bound)
+        rkey = (int(u), int(v), ckey, kind, bound)
         req = _Request(int(u), int(v), p, rkey, rows.n_terms, kind,
                        int(hops), k, with_lsn)
         with self._lock:
@@ -971,6 +985,24 @@ class QueryServer:
                     tdr_query.count_routes(idx, cu, cv, cp, hops=1,
                                            **common)
                     break
+            # rpq: lowered regexes ride the answer_plan shapes warmed
+            # above; the product executor runs at fixed shapes under
+            # "full" mode (job axis padded to exact_chunk, full-graph
+            # corridor), so one product-route probe compiles both its
+            # phases.  The probe is (a|…)+ at u0==u0: inexpressible
+            # (Plus, not Star), not nullable (no ε pre-answer), and its
+            # over-approximation is label-free, so the filter cascade
+            # cannot prune it — the NFA executor is guaranteed to run.
+            n_l = idx.graph.n_labels
+            rdemo = rpq_mod.plus(rpq_mod.alt(
+                *(rpq_mod.Sym(i) for i in range(n_l))))
+            # q_unroll pinned: the compiled NFA shapes must not depend
+            # on which regexes a live batch happens to hold
+            tdr_query.rpq_batch(idx, [(u0, u0, rdemo)],
+                                exact_chunk=cfg.exact_chunk,
+                                special_labels=self._special,
+                                pad_lo=cfg.min_bucket, q_unroll=32,
+                                **common)
         return engine_mod.jit_cache_entries() - n0
 
     # ------------------------------------------------------------ scheduler
@@ -1117,8 +1149,11 @@ class QueryServer:
     def _answer_keys(self, keys: list, uniq: dict) -> dict:
         """Run every kind's executor over its slice of the unique keys.
         Bool queries batch through ``answer_plan``; dist queries batch
-        per k-bound (k is traced, so the groups share one compile);
-        witness/count run per query at fixed single-query shapes."""
+        per k-bound (k is traced, so the groups share one compile); rpq
+        queries batch through ``rpq_batch`` (lowered ones ride the same
+        ``answer_plan`` shapes as bool traffic, product-route ones the
+        fixed ``exact_chunk`` NFA shapes); witness/count run per query
+        at fixed single-query shapes."""
         cfg = self.config
         qstats = self.stats.query_stats
         out: dict = {}
@@ -1140,6 +1175,14 @@ class QueryServer:
                 exact_chunk=cfg.exact_chunk,
                 special_labels=self._special, **common)
             out.update(zip(group, (int(d) for d in ds)))
+        rpq_keys = [kk for kk in keys if uniq[kk][3] == "rpq"]
+        if rpq_keys:
+            ans = tdr_query.rpq_batch(
+                self.index, [uniq[kk][:3] for kk in rpq_keys],
+                exact_chunk=cfg.exact_chunk,
+                special_labels=self._special,
+                pad_lo=cfg.min_bucket, q_unroll=32, **common)
+            out.update(zip(rpq_keys, (bool(a) for a in ans)))
         for kk in keys:
             u, v, p, kd, hops, _ = uniq[kk]
             if kd == "witness":

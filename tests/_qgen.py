@@ -7,6 +7,49 @@ keeping the in-process and subprocess legs on the same query
 distribution.
 """
 from repro.core import pattern as pat
+from repro.core import rpq
+
+
+def random_rpq(rng, n_labels, depth=3, star_bias=0.35):
+    """One random RPQ AST: bounded depth, biased toward stars and
+    nested alternation (the shapes that stress closure absorption and
+    the product executor's round count).  Occasionally emits an
+    out-of-alphabet atom (``l{n_labels}``) so empty-/unmatchable-
+    language regexes are in-distribution."""
+    def go(depth):
+        if depth <= 0 or rng.random() < 0.25:
+            if rng.random() < 0.06:     # out-of-alphabet: unmatchable
+                return rpq.Sym(int(n_labels))
+            return rpq.Sym(int(rng.integers(n_labels)))
+        roll = rng.random()
+        if roll < star_bias:
+            body = go(depth - 1)
+            k = rng.random()
+            return (rpq.Star(body) if k < 0.6 else
+                    rpq.Plus(body) if k < 0.8 else rpq.Opt(body))
+        if roll < star_bias + 0.35:
+            n = int(rng.integers(2, 4))
+            return rpq.Alt(tuple(go(depth - 1) for _ in range(n)))
+        n = int(rng.integers(2, 4))
+        return rpq.Cat(tuple(go(depth - 1) for _ in range(n)))
+    return go(depth)
+
+
+def rpq_queries(rng, g, n, depth=3):
+    """n random (u, v, rpq) triples mirroring ``mixed_queries``'s vertex
+    distribution (~1 in 5 self-queries), regexes small enough for the
+    32-state Glushkov cap."""
+    qs = []
+    while len(qs) < n:
+        r = random_rpq(rng, g.n_labels, depth=depth)
+        try:
+            rpq.compile_nfa(r, g.n_labels)
+        except ValueError:      # > 31 label occurrences: re-draw
+            continue
+        u = int(rng.integers(g.n_vertices))
+        v = u if rng.integers(5) == 0 else int(rng.integers(g.n_vertices))
+        qs.append((u, v, r))
+    return qs
 
 
 def mixed_queries(rng, g, n):

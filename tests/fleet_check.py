@@ -14,7 +14,10 @@ every LSN is known in the parent.  Three legs per backend:
 2. **Consistent reads at a pinned LSN** — answers routed with
    ``min_lsn=L`` carry ``lsn >= L`` and are bit-identical to a single
    caught-up in-process follower (``QueryServer.follow``) asked the
-   same questions.
+   same questions.  An **RPQ sub-leg** routes ``kind="rpq"`` regex
+   queries over the same wire (regex-text serialization round-trips
+   through the replicas) and checks each LSN-stamped answer against the
+   product-graph oracle at its read LSN.
 3. **Writer SIGKILL** — a writer subprocess is SIGKILLed mid-publish; a
    new ``FleetWriter`` attaches to the store (torn tail truncated, as
    single-process recovery would), resumes the stream, and the replicas
@@ -36,7 +39,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import numpy as np  # noqa: E402
 
 from repro.core import dfs_baseline, graph as G  # noqa: E402
-from repro.core import pattern as pat, tdr_build  # noqa: E402
+from repro.core import pattern as pat, rpq, tdr_build  # noqa: E402
 from repro.launch import fleet as fleet_mod, serve  # noqa: E402
 from repro.launch.router import FleetRouter  # noqa: E402
 
@@ -79,6 +82,40 @@ def query_pool(seed: int, n: int = 8):
              pat.parse(f"l{labs[0]} & !l{labs[1]}")][i % 4]
         qs.append((u, v, p))
     return qs
+
+
+def rpq_pool():
+    """Fixed regex pool with labels < N_L: lowered ((a|b)* → the LCR
+    plan path), product-route (order-constrained), and unmatchable."""
+    return [
+        (0, 7, rpq.parse("(l0 | l1)*")),
+        (3, 3, rpq.parse("l2*")),
+        (1, 9, rpq.parse("l0 . (l1 | l2)*")),
+        (5, 5, rpq.parse("l3 . l0")),
+        (2, 11, rpq.parse("(l0 | l1 | l2 | l3)+")),
+        (4, 8, rpq.parse("l1 . l2")),
+    ]
+
+
+def leg_rpq(router, writer, graphs):
+    """Route kind="rpq" queries through the fleet wire; every stamped
+    answer must equal the product-graph oracle at its read LSN, and
+    pinned reads must carry lsn >= the pin."""
+    L = writer.last_lsn
+    futs = [(u, v, r, router.submit(u, v, r, kind="rpq"))
+            for u, v, r in rpq_pool()]
+    futs += [(u, v, r, router.submit(u, v, r, kind="rpq", min_lsn=L,
+                                     lsn_timeout=240))
+             for u, v, r in rpq_pool()[:3]]
+    for i, (u, v, r, f) in enumerate(futs):
+        ans, lsn = f.result(timeout=300)
+        if i >= len(rpq_pool()):
+            assert lsn >= L, f"pinned rpq read served at lsn {lsn} < {L}"
+        want = dfs_baseline.answer_rpq(graphs[lsn], u, v, r)
+        assert ans == want, \
+            f"rpq: ({u},{v},{rpq.unparse(r)}) at lsn={lsn}: " \
+            f"got {ans!r}, oracle {want!r}"
+    return len(futs)
 
 
 def check_at_lsn(graphs, u, v, p, ans, lsn, ctx):
@@ -223,6 +260,7 @@ def run_one(backend: str, workdir: str, seed: int) -> None:
                                       steps, qs, n_pub=6)
         n_answers += leg_consistent_reads(router, backend, d, writer,
                                           graphs, qs)
+        n_answers += leg_rpq(router, writer, graphs)
         first_step = writer.last_lsn
         writer.close()   # single-writer seat: release before the worker
         k = leg_writer_kill(router, d, graphs, steps, qs, seed,

@@ -76,3 +76,47 @@ def patterns(draw, depth=0):
 def test_dnf_equivalent_to_pattern(p):
     terms = pat.to_dnf(p)
     assert pat.dnf_equivalent(p, terms, 5)
+
+
+# --------------------------------------------------- API edges & errors
+def test_unparse_roundtrip():
+    for txt in ("l0", "!(l1)", "l0 & !(l1 | l2)", "(l0 | l1) & l2"):
+        p = pat.parse(txt)
+        assert pat.canonical_key(pat.parse(pat.unparse(p))) == \
+            pat.canonical_key(p)
+
+
+def test_helper_constructors():
+    p = pat.and_(pat.label(0), pat.or_(pat.label(1), pat.label(2)))
+    assert pat.evaluate(p, frozenset({0, 2})) is True
+    assert pat.evaluate(p, frozenset({0})) is False
+
+
+def test_non_pattern_rejected():
+    with pytest.raises(TypeError):
+        pat.evaluate("l0", frozenset())
+    with pytest.raises(TypeError):
+        pat.canonicalize(42)
+    with pytest.raises(TypeError):
+        pat.unparse(None)
+
+
+def test_parse_error_messages():
+    # a bad character must raise, not hang the tokenizer (replicas parse
+    # patterns straight off the fleet wire)
+    with pytest.raises(ValueError, match="bad character"):
+        pat.parse("l0 & %")
+    with pytest.raises(ValueError, match="trailing"):
+        pat.parse("l0 l1")      # juxtaposition is RPQ syntax, not pattern
+    with pytest.raises(ValueError, match="expected"):
+        pat.parse("(l0 | l1 l2)")
+    with pytest.raises(ValueError, match="unexpected end"):
+        pat.parse("(l0 & l1")
+
+
+def test_dnf_blowup_capped():
+    # (l0|l1) & (l2|l3) & … distributes to 2^9 = 512 incomparable terms
+    p = pat.And(tuple(pat.Or((pat.Label(2 * i), pat.Label(2 * i + 1)))
+                      for i in range(9)))
+    with pytest.raises(ValueError, match="blow-up"):
+        pat.to_dnf(p, max_terms=256)

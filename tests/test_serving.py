@@ -22,7 +22,7 @@ except ImportError:  # clean container: vendored fallback (see _minihyp.py)
     st = hp.strategies
 
 from repro.core import dfs_baseline, graph as G, pattern as pat
-from repro.core import tdr_build, tdr_query
+from repro.core import rpq, tdr_build, tdr_query
 from repro.launch import serve
 
 CFG = tdr_build.TDRConfig(vtx_bits=64, g_max=4, k=3)
@@ -221,16 +221,30 @@ def test_canonicalize_equivalence():
 
 def test_mixed_kind_load_no_recompile(served_graph):
     """Satellite contract: after a warmup pool covering every query kind,
-    sustained mixed-kind traffic (bool/dist/witness/count, duplicate and
-    fresh keys alike) adds ZERO jit cache entries — every kind's bucket
-    grid is pinned up front — and every answer equals its oracle.  Also
-    pins the per-kind result-cache key: a dist hit must not serve a bool
-    request for the same (u, v, pattern)."""
+    sustained mixed-kind traffic (bool/dist/witness/count/rpq, duplicate
+    and fresh keys alike) adds ZERO jit cache entries — every kind's
+    bucket grid is pinned up front — and every answer equals its oracle.
+    Also pins the per-kind result-cache key: a dist hit must not serve a
+    bool request for the same (u, v, pattern)."""
     from repro.core import engine as engine_mod
 
     g, idx = served_graph
     pool = _query_pool(g, 23, n=20)
     single = [q for q in pool if len(pat.to_dnf(q[2])) == 1]
+    # rpq pool: lowered ((a|b)* rides answer_plan) and product-route
+    # (order-constrained) regexes, plus u==v ε and unmatchable shapes —
+    # few distinct keys so one scheduler batch stays inside the warmed
+    # job buckets
+    rpq_pool = [
+        (0, 7, rpq.parse("(l0 | l1)*")),
+        (3, 3, rpq.parse("l2*")),
+        (1, 9, rpq.parse("l0 . (l1 | l2)*")),
+        (5, 5, rpq.parse("l3 . l0")),
+        (2, 11, rpq.parse("(l0 | l1 | l2 | l3)+")),
+        (4, 8, rpq.parse("l1 . l2 . l3")),
+        (6, 6, rpq.parse("l0?")),
+        (0, 13, rpq.Sym(g.n_labels)),          # unmatchable atom
+    ]
     with serve.QueryServer(idx, max_wait_ms=1.0, result_cache=64) as srv:
         srv.warmup(pool)
         n0 = engine_mod.jit_cache_entries()
@@ -243,6 +257,10 @@ def test_mixed_kind_load_no_recompile(served_graph):
         for (u, v, p) in single[:6]:
             futs.append(((u, v, p, "count"),
                          srv.submit(u, v, p, kind="count", hops=4)))
+        for i in range(20):
+            u, v, r = rpq_pool[int(rng.integers(len(rpq_pool)))]
+            futs.append(((u, v, r, "rpq"),
+                         srv.submit(u, v, r, kind="rpq")))
         for (u, v, p, kd), f in futs:
             got = f.result(timeout=60)
             if kd == "bool":
@@ -256,11 +274,18 @@ def test_mixed_kind_load_no_recompile(served_graph):
                 else:
                     assert len(got) == want
                     assert dfs_baseline.verify_witness(g, u, v, p, got)
+            elif kd == "rpq":
+                assert got == dfs_baseline.answer_rpq(g, u, v, p), \
+                    (u, v, rpq.unparse(p))
             else:
                 assert got == dfs_baseline.count_routes(
                     g, u, v, p, hops=4, cap=32767)
         assert engine_mod.jit_cache_entries() == n0, \
             "mixed-kind load recompiled after warmup"
+        # an rpq submit takes a regex AST, not a pattern — rejected on
+        # the caller thread like every other submit-time contract
+        with pytest.raises(ValueError, match="rpq"):
+            srv.submit(0, 1, pat.label(0), kind="rpq")
         # result-cache keys carry the kind: same (u,v,p) under two kinds
         # is two distinct entries with kind-correct answers
         u, v, p = pool[0]
